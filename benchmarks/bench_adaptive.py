@@ -1,0 +1,72 @@
+"""Paper Fig. 7 / Fig. 8 / Fig. 11: adaptive threshold & scheme comparison.
+
+* Fig. 7  — threshold case study: fraction of 'successful directions'
+* Fig. 8/11 — OrangeFS vs OrangeFS-BB vs SSDUP vs SSDUP+ throughput and the
+  fraction of data buffered in SSD (the capacity-saving headline)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_BYTES, Row, emit, timeit
+from repro.core import (
+    AdaptiveThreshold,
+    DataRedirector,
+    Device,
+    ior,
+    run_schemes,
+)
+
+
+def fig7_case_study(total_bytes: int) -> list[Row]:
+    print("\n== Fig 7: adaptive-threshold direction quality (strided, 64p) ==")
+    w = ior("strided", 64, total_bytes=total_bytes // 2)
+    red = DataRedirector(AdaptiveThreshold(window=64))
+    routed = list(red.route(w.trace))
+    pcts = np.array([r.percentage for r in routed])
+    to_ssd = np.array([r.device is Device.SSD for r in routed])
+    avg = pcts.mean()
+    # paper's criterion: a direction is "successful" when the SSD decision
+    # coincides with the stream's percentage exceeding the average
+    success = float(np.mean(to_ssd == (pcts > avg)))
+    print(f"streams={len(routed)} ssd_frac={to_ssd.mean():.3f} "
+          f"success={success*100:.1f}% (paper: 79.48%)")
+    return [Row("fig7_success", 0.0,
+                f"success={success:.4f};ssd_frac={to_ssd.mean():.4f}")]
+
+
+def fig8_11_schemes(total_bytes: int, procs=(8, 16, 32, 64, 128)) -> list[Row]:
+    rows: list[Row] = []
+    print("\n== Fig 8/11: schemes on strided IOR (ample SSD) ==")
+    print(f"{'procs':>5s} | " + " | ".join(
+        f"{s:>24s}" for s in ("orangefs", "orangefs-bb", "ssdup", "ssdup+")))
+    for n in procs:
+        w = ior("strided", n, total_bytes=total_bytes // 2)
+        us, res = timeit(lambda: run_schemes(
+            w.trace, ssd_capacity=total_bytes))
+        cells = []
+        for s in ("orangefs", "orangefs-bb", "ssdup", "ssdup+"):
+            r = res[s]
+            cells.append(f"{2*r.throughput_mbs:7.1f}MB/s {r.ssd_byte_ratio*100:5.1f}%ssd")
+            rows.append(Row(
+                f"fig11_{s}_{n}p", us / 4,
+                f"agg_mbs={2*r.throughput_mbs:.1f};ssd_ratio={r.ssd_byte_ratio:.3f}"))
+        print(f"{n:5d} | " + " | ".join(cells))
+    # capacity-saving headline (paper: ~50% less SSD than SSDUP at 64p)
+    w = ior("strided", 64, total_bytes=total_bytes // 2)
+    res = run_schemes(w.trace, schemes=("ssdup", "ssdup+"),
+                      ssd_capacity=total_bytes)
+    saving = 1 - res["ssdup+"].ssd_byte_ratio / max(res["ssdup"].ssd_byte_ratio, 1e-9)
+    print(f"SSD capacity saving vs SSDUP @64p: {saving*100:.1f}% "
+          "(paper: >50%)")
+    rows.append(Row("fig11_capacity_saving_64p", 0.0, f"saving={saving:.3f}"))
+    return rows
+
+
+def run(total_bytes: int = BENCH_BYTES) -> list[Row]:
+    return fig7_case_study(total_bytes) + fig8_11_schemes(total_bytes)
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,44 @@
+"""Paper Fig. 15: HPIO region-size sweep (c-c x c-nc mixed instances).
+
+Two HPIO instances run concurrently (contiguous + non-contiguous); region
+size sweeps 32K..256K at 32 processes.  Reported: per-scheme throughput and
+the SSD bytes saved by SSDUP+ vs SSDUP (paper: >15% average saving at <6%
+throughput cost).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BENCH_BYTES, Row, emit, timeit
+from repro.core import hpio, mixed, relabel, run_schemes
+from repro.core.workloads import KiB
+
+
+def run(total_bytes: int = BENCH_BYTES) -> list[Row]:
+    rows: list[Row] = []
+    app = total_bytes // 2
+    print("\n== Fig 15: HPIO region-size sweep (32 procs, c-c x c-nc) ==")
+    print(f"{'region':>8s} | {'orangefs-bb':>22s} | {'ssdup':>22s} | {'ssdup+':>22s} | {'ssd saved':>9s}")
+    for rs in (32 * KiB, 64 * KiB, 128 * KiB, 256 * KiB):
+        w1 = relabel(hpio(True, 32, region_size=rs, total_bytes=app // 2, seed=1),
+                     app_id=0, file_id=0)
+        w2 = relabel(hpio(False, 32, region_size=rs, total_bytes=app // 2, seed=2),
+                     app_id=1, file_id=1)
+        mw = mixed(w1, w2, burst_requests=512)
+        us, res = timeit(lambda: run_schemes(
+            mw.trace, schemes=("orangefs-bb", "ssdup", "ssdup+"),
+            ssd_capacity=app))
+        cells = []
+        for s in ("orangefs-bb", "ssdup", "ssdup+"):
+            r = res[s]
+            cells.append(f"{2*r.throughput_mbs:8.1f}MB/s {r.ssd_byte_ratio*100:5.1f}%")
+            rows.append(Row(
+                f"fig15_{s}_{rs//KiB}k", us / 3,
+                f"agg_mbs={2*r.throughput_mbs:.1f};ssd_ratio={r.ssd_byte_ratio:.3f}"))
+        saved = 1 - res["ssdup+"].ssd_byte_ratio / max(res["ssdup"].ssd_byte_ratio, 1e-9)
+        print(f"{rs//KiB:6d}K | " + " | ".join(cells) + f" | {saved*100:8.1f}%")
+        rows.append(Row(f"fig15_saving_{rs//KiB}k", 0.0, f"saving={saved:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,41 @@
+"""Paper Fig. 2 / Fig. 6: access-pattern throughput + random percentage.
+
+Reproduces the inverse throughput <-> randomness correlation that motivates
+the random-factor detector, on the calibrated device model (aggregate over
+2 I/O nodes, like the paper's testbed).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_BYTES, Row, emit, timeit
+from repro.core import IONodeSimulator, StreamGrouper, ior, stream_percentage
+
+PAPER_FIG6 = {8: 208.1, 16: 211.76, 32: 175.8, 64: 159.29, 128: 132.68}
+
+
+def run(total_bytes: int = BENCH_BYTES, procs=(8, 16, 32, 64, 128)) -> list[Row]:
+    rows: list[Row] = []
+    print("\n== Fig 2/6: throughput vs pattern & process count (OrangeFS) ==")
+    print(f"{'pattern':24s} {'procs':>5s} {'RP%':>6s} {'MB/s(agg)':>10s} {'paper':>7s}")
+    for pattern in ("segmented-contiguous", "strided", "segmented-random"):
+        for n in procs:
+            w = ior(pattern, n, total_bytes=total_bytes // 2)  # per node
+            g = StreamGrouper(128)
+            rps = [stream_percentage(s) for s in g.push_many(w.trace)]
+            rp = float(np.mean(rps)) if rps else 0.0
+            us, res = timeit(
+                lambda: IONodeSimulator(scheme="orangefs").run(list(w.trace)))
+            agg = 2 * res.throughput_mbs
+            paper = PAPER_FIG6.get(n, float("nan")) if pattern == "strided" else float("nan")
+            print(f"{pattern:24s} {n:5d} {rp*100:6.1f} {agg:10.1f} "
+                  f"{paper if paper == paper else '':>7}")
+            rows.append(Row(
+                f"fig6_{pattern}_{n}p", us,
+                f"agg_mbs={agg:.1f};rp={rp:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

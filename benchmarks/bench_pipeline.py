@@ -1,0 +1,75 @@
+"""Paper Fig. 9/13 (constrained SSD, traffic-aware flushing) and Fig. 14
+(compute-gap tolerance).
+
+workload1 = segmented-contiguous x segmented-random (bursty mix);
+workload2 = segmented-random x segmented-random.
+SSD = half the total data; SSDUP+ splits it into two regions.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BENCH_BYTES, Row, emit, timeit
+from repro.core import Gap, IONodeSimulator, ior, mixed, relabel, run_schemes
+
+
+def fig13(total_bytes: int) -> list[Row]:
+    rows: list[Row] = []
+    # the traffic-aware-flushing effect needs the paper's phase geometry
+    # (bursts small relative to the app volume): pin to >= 8 GiB mixed
+    # regardless of the default bench scale
+    app = max(total_bytes, 8 * 2**30) // 2
+    print("\n== Fig 9/13: constrained SSD (cap = data/2), mixed loads ==")
+    for wl_name, p1 in (("workload1", "segmented-contiguous"),
+                        ("workload2", "segmented-random")):
+        w1 = relabel(ior(p1, 16, total_bytes=app // 2, seed=1), app_id=0, file_id=0)
+        w2 = relabel(ior("segmented-random", 16, total_bytes=app // 2, seed=2),
+                     app_id=1, file_id=1)
+        mw = mixed(w1, w2, burst_requests=512)
+        us, res = timeit(lambda: run_schemes(
+            mw.trace, schemes=("orangefs-bb", "ssdup", "ssdup+"),
+            ssd_capacity=app // 2))
+        line = f"{wl_name}: "
+        for s in ("orangefs-bb", "ssdup", "ssdup+"):
+            r = res[s]
+            line += (f"{s}={2*r.throughput_mbs:6.1f}MB/s"
+                     f"(pause {r.flush_paused_seconds:4.0f}s,"
+                     f" {r.flushes}fl)  ")
+            rows.append(Row(f"fig13_{wl_name}_{s}", us / 3,
+                            f"agg_mbs={2*r.throughput_mbs:.1f};"
+                            f"paused_s={r.flush_paused_seconds:.1f};"
+                            f"flushes={r.flushes}"))
+        print(line)
+        gain = (res["ssdup+"].throughput_mbs / res["ssdup"].throughput_mbs - 1) * 100
+        print(f"  SSDUP+ vs SSDUP: {gain:+.1f}%  (paper wl1: +34.8%)")
+    return rows
+
+
+def fig14(total_bytes: int) -> list[Row]:
+    rows: list[Row] = []
+    app = total_bytes // 4
+    print("\n== Fig 14: compute-gap tolerance (2 seg-random phases) ==")
+    print(f"{'gap':>4s} {'orangefs-bb':>12s} {'ssdup+':>10s}")
+    for gap in (0, 10, 20, 30):
+        line = f"{gap:3d}s"
+        vals = {}
+        for s in ("orangefs-bb", "ssdup+"):
+            wa = relabel(ior("segmented-random", 16, total_bytes=app, seed=5),
+                         app_id=0, file_id=0)
+            wb = relabel(ior("segmented-random", 16, total_bytes=app, seed=6),
+                         app_id=1, file_id=1, start_time=1e9)
+            trace = list(wa.trace) + [Gap(float(gap))] + list(wb.trace)
+            us, r = timeit(lambda: IONodeSimulator(
+                scheme=s, ssd_capacity=app).run(trace))
+            vals[s] = 2 * r.throughput_mbs
+            rows.append(Row(f"fig14_{s}_gap{gap}", us,
+                            f"agg_mbs={vals[s]:.1f}"))
+        print(f"{line} {vals['orangefs-bb']:12.1f} {vals['ssdup+']:10.1f}")
+    return rows
+
+
+def run(total_bytes: int = BENCH_BYTES) -> list[Row]:
+    return fig13(total_bytes) + fig14(total_bytes)
+
+
+if __name__ == "__main__":
+    emit(run())

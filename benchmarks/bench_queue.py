@@ -1,0 +1,37 @@
+"""Paper Fig. 12: CFQ queue size (= stream length) sensitivity.
+
+The paper re-runs 32-process strided IOR with CFQ queues of 32/128/512 and
+reports SSDUP+ improvements of 59.7% / 41.5% / 12.3% over OrangeFS: shorter
+sort windows see more randomness (more data redirected), longer windows let
+the elevator merge more (less benefit).  Stream length tracks the queue.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BENCH_BYTES, Row, emit, timeit
+from repro.core import IONodeSimulator, ior
+
+PAPER = {32: 59.7, 128: 41.5, 512: 12.3}
+
+
+def run(total_bytes: int = BENCH_BYTES) -> list[Row]:
+    rows: list[Row] = []
+    print("\n== Fig 12: stream length (CFQ queue) sensitivity, strided 32p ==")
+    print(f"{'queue':>6s} {'orangefs':>10s} {'ssdup+':>10s} {'gain%':>7s} {'paper%':>7s}")
+    w = ior("strided", 32, total_bytes=total_bytes // 2)
+    for qlen in (32, 128, 512):
+        us, base = timeit(lambda: IONodeSimulator(
+            scheme="orangefs", stream_len=qlen).run(list(w.trace)))
+        _, plus = timeit(lambda: IONodeSimulator(
+            scheme="ssdup+", stream_len=qlen,
+            ssd_capacity=total_bytes).run(list(w.trace)))
+        gain = (plus.throughput_mbs / base.throughput_mbs - 1) * 100
+        print(f"{qlen:6d} {2*base.throughput_mbs:10.1f} "
+              f"{2*plus.throughput_mbs:10.1f} {gain:7.1f} {PAPER[qlen]:7.1f}")
+        rows.append(Row(f"fig12_q{qlen}", us,
+                        f"gain_pct={gain:.2f};ssd_ratio={plus.ssd_byte_ratio:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,41 @@
+"""Paper Fig. 16: MPI-Tile-IO — 1-D x 2-D tile instances, process sweep.
+
+Two MPI-Tile-IO instances (one 1-D dense, one 2-D dense, 4 KiB elements)
+run concurrently with 16..128 processes.  Paper: OrangeFS decays with
+process count; SSDUP+ tracks OrangeFS-BB's plateau while buffering ~half
+the bytes SSDUP does at 32 procs.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BENCH_BYTES, Row, emit, timeit
+from repro.core import mixed, mpi_tile_io, relabel, run_schemes
+
+
+def run(total_bytes: int = BENCH_BYTES) -> list[Row]:
+    rows: list[Row] = []
+    app = total_bytes // 2
+    print("\n== Fig 16: MPI-Tile-IO (1-D x 2-D mixed), process sweep ==")
+    print(f"{'procs':>5s} | {'orangefs':>10s} | {'orangefs-bb':>20s} | {'ssdup':>20s} | {'ssdup+':>20s}")
+    for n in (16, 32, 64, 128):
+        w1 = relabel(mpi_tile_io(n, one_dimensional=True, total_bytes=app // 2,
+                                 seed=1), app_id=0, file_id=0)
+        w2 = relabel(mpi_tile_io(n, one_dimensional=False, total_bytes=app // 2,
+                                 seed=2), app_id=1, file_id=1)
+        mw = mixed(w1, w2, burst_requests=512)
+        us, res = timeit(lambda: run_schemes(mw.trace, ssd_capacity=app))
+        cells = [f"{2*res['orangefs'].throughput_mbs:10.1f}"]
+        for s in ("orangefs-bb", "ssdup", "ssdup+"):
+            r = res[s]
+            cells.append(f"{2*r.throughput_mbs:9.1f} {r.ssd_byte_ratio*100:5.1f}%ssd")
+        print(f"{n:5d} | " + " | ".join(cells))
+        for s in ("orangefs", "orangefs-bb", "ssdup", "ssdup+"):
+            r = res[s]
+            rows.append(Row(
+                f"fig16_{s}_{n}p", us / 4,
+                f"agg_mbs={2*r.throughput_mbs:.1f};ssd_ratio={r.ssd_byte_ratio:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,43 @@
+"""Shared benchmark plumbing.
+
+Every benchmark prints human-readable tables plus machine lines
+``name,us_per_call,derived`` (one per measured configuration) so
+``python -m benchmarks.run`` can aggregate a CSV.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.core.workloads import GiB
+
+# paper-scale is 16 GiB; default bench scale keeps a single-core run short
+BENCH_BYTES = 2 * GiB
+PAPER_BYTES = 16 * GiB
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def timeit(fn: Callable, *args, repeat: int = 1, **kw) -> tuple[float, object]:
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def emit(rows: list[Row]) -> None:
+    for r in rows:
+        print(r.csv(), flush=True)

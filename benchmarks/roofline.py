@@ -1,0 +1,93 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (deliverable g).
+
+Reads ``experiments/dryrun/*.json`` (written by ``repro.launch.dryrun``)
+and renders the per-(arch x cell x mesh) table: the three terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and per-device memory — plus a
+one-line "what would move the dominant term" note per dominant kind.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+NOTES = {
+    "memory": "cut bytes: lighter remat policy / fused attention kernel "
+              "(flash) / fp8-bf16 master-weight split",
+    "collective": "cut link bytes: reshard to cut FSDP all-gathers "
+                  "(sequence-shard activations), overlap via latency-hiding "
+                  "scheduler, compress grads",
+    "compute": "near roofline on MXU: raise arithmetic intensity or accept",
+}
+
+
+def load(out_dir: str, mesh: str | None) -> list[dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(p))
+        if r.get("status") != "ok":
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def render(rows: list[dict], md: bool = False) -> str:
+    hdr = (f"{'arch':22s} {'cell':12s} {'mesh':6s} "
+           f"{'compute_ms':>10s} {'memory_ms':>10s} {'collective_ms':>13s} "
+           f"{'dominant':>10s} {'useful':>7s} {'mem/dev GiB':>11s} {'roofline%':>9s}")
+    sep = "-" * len(hdr)
+    lines = [hdr, sep]
+    if md:
+        lines = ["| arch | cell | mesh | compute ms | memory ms | "
+                 "collective ms | dominant | useful | mem/dev GiB | roofline% |",
+                 "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        t = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        mem = r["memory"]["peak_live_bytes_est"] / 2**30
+        # roofline fraction: compute term / max(term) — how close the step
+        # is to being MXU-bound (1.0 = perfectly compute-bound)
+        frac = t["compute_s"] / max(t["step_time_s"], 1e-12) * 100
+        vals = (r["arch"], r["cell"], r["mesh"],
+                f"{t['compute_s']*1e3:.2f}", f"{t['memory_s']*1e3:.2f}",
+                f"{t['collective_s']*1e3:.2f}", t["dominant"],
+                f"{uf:.3f}" if uf else "-", f"{mem:.1f}", f"{frac:.1f}")
+        if md:
+            lines.append("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            lines.append(f"{vals[0]:22s} {vals[1]:12s} {vals[2]:6s} "
+                         f"{vals[3]:>10s} {vals[4]:>10s} {vals[5]:>13s} "
+                         f"{vals[6]:>10s} {vals[7]:>7s} {vals[8]:>11s} "
+                         f"{vals[9]:>9s}")
+    doms = {}
+    for r in rows:
+        doms.setdefault(r["roofline"]["dominant"], 0)
+        doms[r["roofline"]["dominant"]] += 1
+    lines.append("")
+    lines.append(f"dominant-term distribution: {doms}")
+    for d, n in sorted(doms.items()):
+        lines.append(f"  {d:10s} ({n:2d} cells): {NOTES[d]}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.out, args.mesh)
+    if not rows:
+        print("no dry-run records found; run `python -m repro.launch.dryrun --all`")
+        return
+    print(render(rows, md=args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Run every benchmark (one per paper table/figure) and emit the CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig13,...]
+
+``--full`` uses the paper's 16 GiB volumes (slow on one core); the default
+2 GiB keeps a full sweep short while preserving every trend.
+Output: human tables on stdout plus ``name,us_per_call,derived`` lines,
+also written to ``experiments/bench_results.csv``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (  # noqa: E402
+    bench_adaptive,
+    bench_checkpoint,
+    bench_hpio,
+    bench_kernels,
+    bench_overhead,
+    bench_patterns,
+    bench_pipeline,
+    bench_queue,
+    bench_shardmap_decode,
+    bench_tileio,
+)
+from benchmarks.common import BENCH_BYTES, PAPER_BYTES, Row  # noqa: E402
+
+SUITES = {
+    "patterns": lambda tb: bench_patterns.run(tb),
+    "adaptive": lambda tb: bench_adaptive.run(tb),
+    "queue": lambda tb: bench_queue.run(tb),
+    "pipeline": lambda tb: bench_pipeline.run(tb),
+    "hpio": lambda tb: bench_hpio.run(tb),
+    "tileio": lambda tb: bench_tileio.run(tb),
+    "overhead": lambda tb: bench_overhead.run(),
+    "checkpoint": lambda tb: bench_checkpoint.run(),
+    "kernels": lambda tb: bench_kernels.run(),
+    "shardmap_decode": lambda tb: bench_shardmap_decode.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 16 GiB volumes")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+
+    tb = PAPER_BYTES if args.full else BENCH_BYTES
+    names = list(SUITES) if not args.only else args.only.split(",")
+    all_rows: list[Row] = []
+    t0 = time.time()
+    for name in names:
+        print(f"\n######## {name} ########", flush=True)
+        t1 = time.time()
+        rows = SUITES[name](tb)
+        all_rows.extend(rows)
+        print(f"[{name}] {time.time()-t1:.1f}s", flush=True)
+
+    print("\n######## CSV (name,us_per_call,derived) ########")
+    for r in all_rows:
+        print(r.csv())
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for r in all_rows:
+            f.write(r.csv() + "\n")
+    print(f"\n[benchmarks] {len(all_rows)} rows in {time.time()-t0:.1f}s "
+          f"-> experiments/bench_results.csv")
+
+
+def run_all():  # programmatic entry for tests
+    return [r for name in SUITES for r in SUITES[name](BENCH_BYTES)]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Checkpoint substrate: tiered store through the burst buffer + async saves."""
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.tiered_store import TieredCheckpointStore
+
+__all__ = ["Checkpointer", "TieredCheckpointStore"]

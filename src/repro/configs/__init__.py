@@ -1,0 +1,56 @@
+"""Architecture configs: one module per assigned arch (``--arch <id>``)."""
+
+from repro.configs.base import (
+    SHAPE_CELLS,
+    ModelConfig,
+    ShapeCell,
+    applicable_cells,
+    smoke_variant,
+)
+
+
+def _modname(arch: str) -> str:
+    """``qwen3-1.7b`` -> ``qwen3_1p7b`` (dashes -> _, dots -> p)."""
+
+    return arch.replace("-", "_").replace(".", "p")
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Load ``configs/<arch>.py``."""
+
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{_modname(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{_modname(arch)}")
+    return mod.SMOKE
+
+
+ARCHITECTURES = [
+    "internvl2-26b",
+    "qwen3-1.7b",
+    "stablelm-3b",
+    "starcoder2-3b",
+    "phi4-mini-3.8b",
+    "whisper-tiny",
+    "grok-1-314b",
+    "moonshot-v1-16b-a3b",
+    "zamba2-2.7b",
+    "falcon-mamba-7b",
+]
+
+__all__ = [
+    "ModelConfig",
+    "ShapeCell",
+    "SHAPE_CELLS",
+    "applicable_cells",
+    "smoke_variant",
+    "get_config",
+    "get_smoke_config",
+    "ARCHITECTURES",
+]

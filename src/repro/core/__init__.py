@@ -1,0 +1,71 @@
+"""SSDUP+ core: traffic-aware burst buffering (the paper's contribution).
+
+Layering:
+
+* detection     — :mod:`repro.core.random_factor` (random factor, Eq. 1)
+* policy        — :mod:`repro.core.adaptive` (Eq. 2/3 adaptive threshold)
+* routing       — :mod:`repro.core.redirector` (Algorithm 1)
+* buffering     — :mod:`repro.core.log_store`, :mod:`repro.core.avl` (§2.5)
+* pipelining    — :mod:`repro.core.pipeline` (two-region + traffic-aware, §2.4)
+* timing model  — :mod:`repro.core.device_model`, :mod:`repro.core.simulator`
+* workloads     — :mod:`repro.core.workloads` (IOR/HPIO/MPI-Tile-IO)
+* production IO — :mod:`repro.core.burst_buffer` (real-byte facade used by
+                  the checkpoint path)
+"""
+
+from .adaptive import AdaptiveThreshold, StaticWatermarkThreshold
+from .avl import AVLTree, Extent
+from .burst_buffer import BurstBufferWriter
+from .device_model import HDDModel, InterferenceModel, SSDModel
+from .log_store import LogRegion, RegionFullError
+from .pipeline import FlushState, SingleRegionBuffer, TwoRegionPipeline
+from .random_factor import (
+    DEFAULT_STREAM_LEN,
+    Request,
+    StreamGrouper,
+    random_factor_batch,
+    random_factor_sum,
+    random_percentage,
+    random_percentage_batch,
+    stream_percentage,
+)
+from .redirector import DataRedirector, Device, RoutedStream
+from .simulator import Gap, IONodeSimulator, SimResult, run_schemes
+from .workloads import Workload, hpio, ior, mixed, mpi_tile_io, relabel
+
+__all__ = [
+    "AdaptiveThreshold",
+    "StaticWatermarkThreshold",
+    "AVLTree",
+    "Extent",
+    "BurstBufferWriter",
+    "HDDModel",
+    "SSDModel",
+    "InterferenceModel",
+    "LogRegion",
+    "RegionFullError",
+    "FlushState",
+    "TwoRegionPipeline",
+    "SingleRegionBuffer",
+    "DEFAULT_STREAM_LEN",
+    "Request",
+    "StreamGrouper",
+    "random_factor_sum",
+    "random_percentage",
+    "random_factor_batch",
+    "random_percentage_batch",
+    "stream_percentage",
+    "DataRedirector",
+    "Device",
+    "RoutedStream",
+    "Gap",
+    "IONodeSimulator",
+    "SimResult",
+    "run_schemes",
+    "Workload",
+    "ior",
+    "hpio",
+    "mpi_tile_io",
+    "mixed",
+    "relabel",
+]

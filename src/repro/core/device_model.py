@@ -1,0 +1,124 @@
+"""Storage-device timing models, calibrated to the paper's testbed.
+
+This container has neither a spinning disk nor an SSD under test, so the
+paper-validation experiments run against analytic device models (DESIGN.md
+§8).  The HDD model follows the paper's own abstraction (Section 2.2): one
+seek per random-factor unit, with seek time roughly linear in logical-offset
+distance (the paper cites FS2 for that linearity), plus sequential-bandwidth
+transfer.
+
+Calibration.  The testbed (Section 4.1) is OrangeFS over 2 I/O nodes with a
+Toshiba MBF2300RC SAS disk and an Intel DC S3520 SATA SSD per node, on
+**Gigabit Ethernet** — so each I/O node's ingest is capped at ~110 MB/s,
+which is what makes the paper's SSD-backed curves plateau at ~212-218 MB/s
+aggregate (Fig. 11).  We fit TWO constants against two measurements from
+Fig. 2/6 (16 GiB, 256 KiB requests, aggregate over 2 nodes):
+
+* segmented-random  ≈  95 MB/s (RP ≈ 0.97, ~124 seeks + a full-file sweep
+  per 128-request window)
+* strided @32 procs ≈ 176 MB/s (RP ≈ 0.28, ~37 seeks + sweep)
+
+Solving ``t_stream = bytes/seq_bw + seeks*seek_time + distance*coeff`` for
+the two unknowns gives ``seek_time ≈ 3.56 ms`` and
+``coeff ≈ 5.1e-12 s/B``.  The remaining Fig. 6 points then VALIDATE the
+model: strided@16 → 213 (paper 211.8), strided@64 → ~146 (paper 159),
+strided@128 → ~116 (paper 133), seg-contig@16 → 220 (paper 218).  Known
+deviation: seg-contig@128 undershoots (94 vs paper's 150 MB/s) because the
+paper's CFQ elevator retains cross-window track locality that a per-window
+seek count cannot see; scheme *comparisons* are unaffected (EXPERIMENTS.md
+§Paper-validation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HDDModel:
+    """Seek + distance + sequential-bandwidth disk model."""
+
+    seq_bw: float = 220e6  # bytes/s, large sequential writes
+    seek_time: float = 3.56e-3  # s per head movement (random-factor unit)
+    seek_dist_coeff: float = 5.1e-12  # s per byte of logical seek distance
+    name: str = "hdd"
+
+    def write_time(self, nbytes: int, seeks: int, seek_distance: int = 0) -> float:
+        """Service time of a sorted request batch with ``seeks`` movements."""
+
+        if nbytes < 0 or seeks < 0:
+            raise ValueError("negative work")
+        return (
+            seeks * self.seek_time
+            + seek_distance * self.seek_dist_coeff
+            + nbytes / self.seq_bw
+        )
+
+    def sequential_time(self, nbytes: int) -> float:
+        return nbytes / self.seq_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDModel:
+    """Flash model: bandwidth-only, near-zero seek (paper Section 2.5)."""
+
+    write_bw: float = 380e6  # bytes/s sequential (log-structured appends)
+    read_bw: float = 450e6  # bytes/s (random reads ~ sequential on flash)
+    name: str = "ssd"
+
+    def write_time(self, nbytes: int) -> float:
+        return nbytes / self.write_bw
+
+    def read_time(self, nbytes: int) -> float:
+        return nbytes / self.read_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestLink:
+    """Per-I/O-node network ingest (GbE on the paper's testbed)."""
+
+    bw: float = 110e6  # bytes/s
+
+    def time(self, nbytes: int) -> float:
+        return nbytes / self.bw
+
+
+@dataclasses.dataclass(frozen=True)
+class InterferenceModel:
+    """Cost of concurrent HDD writers (paper Sections 2.4.2-2.4.3, Eq. 7).
+
+    When the flusher and direct application writes hit the HDD together the
+    disk head ping-pongs between the two streams.  We model the shared disk
+    as a fair (50/50) server with a service-time inflation ``phi`` on every
+    byte while shared: a foreground batch whose disk time is ``dt`` alone
+    needs ``2 * phi * dt`` of disk occupancy when shared, and the concurrent
+    flusher drains at ``seq_bw / (2 * phi)``.
+
+    ``phi = 2.0`` calibrates SSDUP+ on the paper's workload_1 (Fig. 9/13)
+    to within 2% of the paper's aggregate (176.9 vs 180.7 MB/s) and keeps
+    the SSDUP+ > SSDUP ordering; see EXPERIMENTS.md §Paper-validation for
+    the one ordering (BB vs SSDUP) the fair-share model flips.
+    """
+
+    phi: float = 2.0
+
+    def foreground_slowdown(self) -> float:
+        return 2.0 * self.phi
+
+    def flush_rate_fraction(self) -> float:
+        return 1.0 / (2.0 * self.phi)
+
+
+# The tiers of the *framework* deployment (checkpoint path).  Relative speeds
+# mirror the paper's SSD:HDD asymmetry one level up the hierarchy: local
+# NVMe/DRAM burst tier vs. a remote parallel FS whose effective per-client
+# bandwidth collapses under unmerged small writes.
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    name: str
+    bw: float  # bytes/s
+    seek_time: float = 0.0  # per non-contiguous write (request-merge miss)
+
+
+LOCAL_BURST_TIER = TierSpec("local-nvme", bw=2.0e9)
+REMOTE_PFS_TIER = TierSpec("remote-pfs", bw=0.5e9, seek_time=0.8e-3)

@@ -1,0 +1,134 @@
+"""Log-structured fast-tier store with AVL indexing (paper Section 2.5).
+
+Random writes redirected to the fast tier are *appended* to a per-region log
+(sequential SSD writes avoid write amplification; paper cites RIPQ), and an
+AVL tree per backing file records ``original offset -> log extent``.  When a
+region flushes, an in-order AVL traversal yields the extents in backing-file
+order: reads from the log are random, but SSD random reads are ~free, and the
+slow-tier writes become sequential — the paper's key asymmetry.
+
+This module is device-agnostic: it tracks extents and byte accounting.  The
+timing of the underlying devices is modeled by ``device_model.py`` and the
+actual persistence backend (for the framework's checkpoint path) lives in
+``repro.checkpoint.tiered_store`` which embeds one of these per region.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator
+
+from .avl import AVLTree, Extent
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class LogRecord:
+    """One appended record in a region's log."""
+
+    file_id: int
+    offset: int  # original offset in the backing file
+    size: int
+    log_offset: int  # byte position in this region's log
+
+
+class LogRegion:
+    """One append-only region of the fast tier (half of the SSD, §2.4)."""
+
+    def __init__(self, capacity_bytes: int, name: str = "region"):
+        if capacity_bytes <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity_bytes
+        self.name = name
+        self.tail = 0  # next append position
+        self.records: list[LogRecord] = []
+        self.trees: dict[int, AVLTree] = {}  # one AVL per backing file
+        self.write_payload: Callable[[LogRecord, bytes | None], None] | None = None
+
+    # -- write path -------------------------------------------------------
+    def free_bytes(self) -> int:
+        return self.capacity - self.tail
+
+    def fits(self, size: int) -> bool:
+        return self.tail + size <= self.capacity
+
+    def append(self, file_id: int, offset: int, size: int, payload: bytes | None = None) -> LogRecord:
+        """Append one request's data to the log and index it."""
+
+        if not self.fits(size):
+            raise RegionFullError(
+                f"{self.name}: {size} B does not fit ({self.free_bytes()} free)"
+            )
+        rec = LogRecord(file_id, offset, size, self.tail)
+        self.tail += size
+        self.records.append(rec)
+        self.trees.setdefault(file_id, AVLTree()).insert(offset, size, rec.log_offset)
+        if self.write_payload is not None:
+            self.write_payload(rec, payload)
+        return rec
+
+    # -- flush path ---------------------------------------------------------
+    def flush_order(self) -> Iterator[tuple[int, Extent]]:
+        """(file_id, extent) pairs in sequential backing-file order.
+
+        In-order AVL traversal per file; files are visited in ascending id so
+        the slow tier sees one sequential pass per file.
+        """
+
+        for file_id in sorted(self.trees):
+            for ext in self.trees[file_id].in_order():
+                yield file_id, ext
+
+    def flush_bytes(self) -> int:
+        """Live bytes that a flush would write (latest version per offset)."""
+
+        return sum(ext.size for _, ext in self.flush_order())
+
+    def metadata_bytes(self) -> int:
+        return sum(t.approx_bytes() for t in self.trees.values())
+
+    def seek_count_if_unsorted(self) -> int:
+        """Seeks the flush would cost WITHOUT the AVL order (arrival order).
+
+        Used by benchmarks to quantify the AVL benefit: arrival order vs
+        in-order traversal.
+        """
+
+        seeks = 0
+        prev_end: dict[int, int] = {}
+        for rec in self.records:
+            if prev_end.get(rec.file_id) != rec.offset:
+                seeks += 1
+            prev_end[rec.file_id] = rec.offset + rec.size
+        return seeks
+
+    def seek_count_sorted(self) -> int:
+        """Seeks of the AVL-ordered flush (gaps between live extents only)."""
+
+        seeks = 0
+        prev_end: dict[int, int] = {}
+        for file_id, ext in self.flush_order():
+            if prev_end.get(file_id) != ext.offset:
+                seeks += 1
+            prev_end[file_id] = ext.end
+        return seeks
+
+    def reset(self) -> None:
+        """Empty the region after a completed flush."""
+
+        self.tail = 0
+        self.records.clear()
+        self.trees.clear()
+
+    @property
+    def used_bytes(self) -> int:
+        return self.tail
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"LogRegion({self.name}, used={self.tail}/{self.capacity}, "
+            f"files={len(self.trees)}, records={len(self.records)})"
+        )
+
+
+class RegionFullError(RuntimeError):
+    """Raised when an append exceeds the region capacity."""

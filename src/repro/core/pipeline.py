@@ -1,0 +1,251 @@
+"""Two-region SSD pipeline with traffic-aware flushing (paper Section 2.4).
+
+The fast tier is split into two equal regions.  One region buffers incoming
+redirected writes while the other flushes to the slow tier; when the
+buffering region fills, the roles swap (Eq. 5: all but the first/last m/2
+stages are fully pipelined).  If both regions are full the writer *blocks*
+until a flush completes (paper: "the system waits until a region becomes
+empty").
+
+Traffic-aware flushing (Section 2.4.2): the flusher checks the detector's
+current random percentage.  High percentage ⇒ most traffic is being absorbed
+by the fast tier, the slow tier is idle ⇒ flush.  Low percentage ⇒ the slow
+tier is busy with direct sequential writes ⇒ pause the flush to avoid head
+thrashing (Eq. 7's T_f' > T_f), unless the pipeline is out of space (both
+regions full), in which case flushing is forced.
+
+This module is a pure state machine — the simulator / checkpoint runtime own
+the clock and call :meth:`flush_progress` with byte quantities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable
+
+from .log_store import LogRegion
+
+
+class FlushState(enum.Enum):
+    IDLE = "idle"
+    FLUSHING = "flushing"
+    PAUSED = "paused"
+
+
+@dataclasses.dataclass
+class FlushJob:
+    region: LogRegion
+    bytes_total: int
+    seeks: int  # residual seeks of the AVL-ordered flush
+    bytes_done: int = 0
+    paused_seconds: float = 0.0
+    forced: bool = False
+
+    @property
+    def bytes_left(self) -> int:
+        return self.bytes_total - self.bytes_done
+
+    @property
+    def done(self) -> bool:
+        return self.bytes_done >= self.bytes_total
+
+
+@dataclasses.dataclass(frozen=True)
+class AppendOutcome:
+    ok: bool
+    swapped: bool = False  # filled region handed to the flusher
+    blocked: bool = False  # both regions full; caller must drain a flush
+
+
+class TwoRegionPipeline:
+    """The paper's two-region buffering/flushing pipeline."""
+
+    def __init__(
+        self,
+        region_capacity: int,
+        traffic_aware: bool = True,
+        flush_gate: float = 0.5,
+        percentage_source: Callable[[], float] | None = None,
+    ):
+        self.regions = (LogRegion(region_capacity, "R0"), LogRegion(region_capacity, "R1"))
+        self.active = 0
+        self.flush_job: FlushJob | None = None
+        self._flush_backlog: list[LogRegion] = []
+        self.traffic_aware = traffic_aware
+        self.flush_gate = flush_gate
+        # Detector hook: returns the current stream random percentage.
+        self.percentage_source = percentage_source or (lambda: 1.0)
+        # stats
+        self.flushes_completed = 0
+        self.total_flushed_bytes = 0
+        self.total_paused_seconds = 0.0
+        self.blocked_events = 0
+
+    # -- write path -------------------------------------------------------
+    @property
+    def active_region(self) -> LogRegion:
+        return self.regions[self.active]
+
+    @property
+    def standby_region(self) -> LogRegion:
+        return self.regions[1 - self.active]
+
+    def append(self, file_id: int, offset: int, size: int) -> AppendOutcome:
+        """Append one redirected request; may swap regions or report a block."""
+
+        region = self.active_region
+        if region.fits(size):
+            region.append(file_id, offset, size)
+            return AppendOutcome(ok=True)
+
+        # Active region is full: try to swap to the standby region.
+        standby = self.standby_region
+        standby_busy = (
+            standby.used_bytes > 0
+            or (self.flush_job is not None and self.flush_job.region is standby)
+            or standby in self._flush_backlog
+        )
+        if standby_busy:
+            self.blocked_events += 1
+            return AppendOutcome(ok=False, blocked=True)
+
+        self._schedule_flush(region)
+        self.active = 1 - self.active
+        if not self.active_region.fits(size):
+            raise ValueError(
+                f"request of {size} B exceeds region capacity {self.active_region.capacity}"
+            )
+        self.active_region.append(file_id, offset, size)
+        return AppendOutcome(ok=True, swapped=True)
+
+    def _schedule_flush(self, region: LogRegion) -> None:
+        if self.flush_job is None:
+            self.flush_job = FlushJob(
+                region=region,
+                bytes_total=region.flush_bytes(),
+                seeks=region.seek_count_sorted(),
+            )
+        else:
+            self._flush_backlog.append(region)
+
+    # -- flush path -------------------------------------------------------
+    def flush_state(self) -> FlushState:
+        job = self.flush_job
+        if job is None:
+            return FlushState.IDLE
+        if self.flush_allowed():
+            return FlushState.FLUSHING
+        return FlushState.PAUSED
+
+    def flush_allowed(self) -> bool:
+        """Traffic-aware gate (Section 2.4.2)."""
+
+        job = self.flush_job
+        if job is None:
+            return False
+        if job.forced or not self.traffic_aware:
+            return True
+        # High random percentage => slow tier is quiet => flush now.
+        return self.percentage_source() >= self.flush_gate
+
+    def force_flush(self) -> None:
+        """Used when the writer is blocked: space reclaim beats interference."""
+
+        if self.flush_job is not None:
+            self.flush_job.forced = True
+
+    def flush_progress(self, nbytes: int) -> int:
+        """Advance the current flush by up to ``nbytes``; returns bytes used."""
+
+        job = self.flush_job
+        if job is None or nbytes <= 0:
+            return 0
+        used = min(nbytes, job.bytes_left)
+        job.bytes_done += used
+        self.total_flushed_bytes += used
+        if job.done:
+            self._complete_flush()
+        return used
+
+    def note_pause(self, seconds: float) -> None:
+        if self.flush_job is not None:
+            self.flush_job.paused_seconds += seconds
+        self.total_paused_seconds += seconds
+
+    def _complete_flush(self) -> None:
+        assert self.flush_job is not None
+        self.flush_job.region.reset()
+        self.flush_job = None
+        self.flushes_completed += 1
+        if self._flush_backlog:
+            self._schedule_flush(self._flush_backlog.pop(0))
+
+    def drain(self) -> list[FlushJob]:
+        """Schedule flushes for all remaining data (end of I/O phase)."""
+
+        jobs: list[FlushJob] = []
+        for region in self.regions:
+            if region.used_bytes > 0 and not (
+                self.flush_job is not None and self.flush_job.region is region
+            ) and region not in self._flush_backlog:
+                self._schedule_flush(region)
+        if self.flush_job is not None:
+            self.flush_job.forced = True
+            jobs.append(self.flush_job)
+        return jobs
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def buffered_bytes(self) -> int:
+        return sum(r.used_bytes for r in self.regions)
+
+    @property
+    def metadata_bytes(self) -> int:
+        return sum(r.metadata_bytes() for r in self.regions)
+
+
+class SingleRegionBuffer(TwoRegionPipeline):
+    """Plain burst buffer: the whole SSD as ONE region (OrangeFS-BB baseline).
+
+    Paper Section 4.2.3: "in OrangeFS-BB, the 8GB is used as an entire
+    space".  When the region fills it flushes; until the flush completes the
+    buffer rejects appends (the simulator then routes those writes straight
+    to the HDD, the paper's overflow behaviour).
+    """
+
+    def __init__(self, capacity: int, **kwargs):
+        kwargs.setdefault("traffic_aware", False)
+        super().__init__(capacity, **kwargs)
+        # keep only region 0; region 1 is permanently retired
+        self.regions = (self.regions[0],)
+
+    @property
+    def active_region(self) -> LogRegion:
+        return self.regions[0]
+
+    @property
+    def standby_region(self) -> LogRegion:  # pragma: no cover - not used
+        return self.regions[0]
+
+    def append(self, file_id: int, offset: int, size: int) -> AppendOutcome:
+        region = self.regions[0]
+        if self.flush_job is not None:
+            # region is being drained; cannot buffer until it completes
+            self.blocked_events += 1
+            return AppendOutcome(ok=False, blocked=True)
+        if region.fits(size):
+            region.append(file_id, offset, size)
+            if region.free_bytes() < max(size, region.capacity // 256):
+                # buffer is (effectively) full: plain BB starts its flush
+                # phase right away (paper Section 4.2.4: "after the first IOR
+                # instance fills the SSD buffer, OrangeFS-BB starts the
+                # flushing phase") — eagerly, so a following compute gap can
+                # drain it.
+                self._schedule_flush(region)
+                self.flush_job.forced = True
+            return AppendOutcome(ok=True)
+        self._schedule_flush(region)
+        self.flush_job.forced = True  # plain BB flushes immediately
+        self.blocked_events += 1
+        return AppendOutcome(ok=False, blocked=True)

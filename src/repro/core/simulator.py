@@ -1,0 +1,300 @@
+"""Event-level I/O-node simulator (reproduces the paper's evaluation).
+
+Replays a request trace against one I/O node under four schemes:
+
+* ``orangefs``     — no buffer; every stream goes to the HDD (CFQ-sorted).
+* ``orangefs-bb``  — plain burst buffer: ALL data to the SSD; when the SSD is
+                     full, incoming data goes straight to HDD while the SSD
+                     flushes (the paper's OrangeFS-BB).
+* ``ssdup``        — SSDUP (ICS'17): static watermark thresholds (45/30),
+                     two-region pipeline, IMMEDIATE flushing.
+* ``ssdup+``       — SSDUP+: adaptive threshold + traffic-aware flushing.
+
+Timing model:
+
+* Every foreground stream is bounded by BOTH the network ingest link
+  (GbE ≈ 110 MB/s per node on the paper's testbed) and the device:
+  ``wall = max(net_time, device_time)``.
+* HDD device time = CFQ-sorted seeks × seek_time + sweep distance × coeff
+  + bytes / seq_bw  (see ``device_model`` calibration notes).
+* The background flusher shares the HDD with foreground HDD writes through
+  :class:`InterferenceModel` (fair share + inflation phi, paper Eq. 7); it
+  runs at full sequential bandwidth while the foreground is on the SSD or
+  during compute gaps.
+* A ``Gap`` item models a compute phase (paper Fig. 14): only the flusher
+  runs.
+
+Accounting matches the paper's measurements: reported throughput uses the
+**application-visible I/O time** (``io_seconds``: last foreground byte
+absorbed, compute gaps excluded); the final background drain is tracked
+separately in ``total_seconds`` (the paper's burst buffer likewise hides the
+final flush in the next compute phase).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from .adaptive import AdaptiveThreshold, StaticWatermarkThreshold
+from .device_model import HDDModel, IngestLink, InterferenceModel, SSDModel
+from .pipeline import SingleRegionBuffer, TwoRegionPipeline
+from .random_factor import (
+    DEFAULT_STREAM_LEN,
+    Request,
+    StreamGrouper,
+    random_factor_sum,
+    sorted_seek_distance,
+    stream_percentage,
+)
+from .redirector import DataRedirector, Device
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class Gap:
+    """A compute phase between I/O phases (no foreground I/O)."""
+
+    seconds: float
+
+
+TraceItem = Request | Gap
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheme: str
+    io_seconds: float  # application-visible I/O time (gaps excluded)
+    total_seconds: float  # includes compute gaps and the final drain
+    total_bytes: int
+    bytes_to_ssd: int
+    bytes_to_hdd_direct: int
+    flushes: int
+    flush_paused_seconds: float
+    blocked_seconds: float
+    peak_ssd_occupancy: int
+    metadata_bytes: int
+    per_app_bytes: dict[int, int]
+
+    @property
+    def throughput_mbs(self) -> float:
+        return self.total_bytes / self.io_seconds / 1e6 if self.io_seconds else 0.0
+
+    @property
+    def ssd_byte_ratio(self) -> float:
+        return self.bytes_to_ssd / self.total_bytes if self.total_bytes else 0.0
+
+    def app_throughput_mbs(self, app_id: int) -> float:
+        return self.per_app_bytes.get(app_id, 0) / self.io_seconds / 1e6
+
+
+class IONodeSimulator:
+    """One I/O node running one of the four schemes."""
+
+    def __init__(
+        self,
+        scheme: str = "ssdup+",
+        ssd_capacity: int = 8 << 30,
+        hdd: HDDModel | None = None,
+        ssd: SSDModel | None = None,
+        link: IngestLink | None = None,
+        interference: InterferenceModel | None = None,
+        stream_len: int = DEFAULT_STREAM_LEN,
+        flush_gate: float = 0.5,
+        adaptive_window: int | None = 64,
+    ):
+        if scheme not in ("orangefs", "orangefs-bb", "ssdup", "ssdup+"):
+            raise ValueError(f"unknown scheme {scheme}")
+        self.scheme = scheme
+        self.hdd = hdd or HDDModel()
+        self.ssd = ssd or SSDModel()
+        self.link = link or IngestLink()
+        self.interference = interference or InterferenceModel()
+        self.stream_len = stream_len
+        self.ssd_capacity = ssd_capacity
+
+        self._last_pct = 0.0
+        if scheme == "ssdup+":
+            policy = AdaptiveThreshold(window=adaptive_window)
+            self.pipeline = TwoRegionPipeline(
+                ssd_capacity // 2, traffic_aware=True, flush_gate=flush_gate,
+                percentage_source=lambda: self._last_pct,
+            )
+            self.redirector: DataRedirector | None = DataRedirector(policy, stream_len)
+        elif scheme == "ssdup":
+            policy = StaticWatermarkThreshold()
+            self.pipeline = TwoRegionPipeline(
+                ssd_capacity // 2, traffic_aware=False,
+                percentage_source=lambda: self._last_pct,
+            )
+            self.redirector = DataRedirector(policy, stream_len)
+        elif scheme == "orangefs-bb":
+            self.pipeline = SingleRegionBuffer(
+                ssd_capacity,
+                percentage_source=lambda: self._last_pct,
+            )
+            self.redirector = None
+        else:  # orangefs
+            self.pipeline = None  # type: ignore[assignment]
+            self.redirector = None
+
+    # ------------------------------------------------------------------
+    def _hdd_stream_time(self, stream: Sequence[Request]) -> float:
+        offs = [r.offset for r in stream]
+        szs = [r.size for r in stream]
+        nbytes = sum(szs)
+        seeks = random_factor_sum(offs, szs)
+        dist = sorted_seek_distance(stream)
+        return self.hdd.write_time(nbytes, seeks, dist)
+
+    def run(self, trace: Sequence[TraceItem]) -> SimResult:
+        clock = 0.0
+        gap_seconds = 0.0
+        bytes_ssd = 0
+        bytes_hdd = 0
+        blocked_seconds = 0.0
+        peak_ssd = 0
+        per_app: dict[int, int] = {}
+        grouper = StreamGrouper(self.stream_len)
+
+        def advance(device_dt: float, nbytes: int, hdd_foreground: bool) -> None:
+            """One foreground operation: device time ``device_dt`` alone,
+            network-capped, with the background flush sharing the HDD."""
+
+            nonlocal clock
+            flushing = (
+                self.pipeline is not None
+                and self.pipeline.flush_job is not None
+            )
+            allowed = flushing and self.pipeline.flush_allowed()
+            net_dt = self.link.time(nbytes)
+            if not flushing or not allowed:
+                wall = max(net_dt, device_dt)
+                if flushing:
+                    self.pipeline.note_pause(wall)
+                clock += wall
+                return
+            if hdd_foreground:
+                disk_dt = device_dt * self.interference.foreground_slowdown()
+                wall = max(net_dt, disk_dt)
+                rate = self.hdd.seq_bw * self.interference.flush_rate_fraction()
+            else:
+                wall = max(net_dt, device_dt)
+                rate = self.hdd.seq_bw
+            self.pipeline.flush_progress(int(rate * wall))
+            clock += wall
+
+        def drain_current_flush() -> float:
+            """Block the writer until the active flush finishes."""
+
+            assert self.pipeline is not None and self.pipeline.flush_job is not None
+            self.pipeline.force_flush()
+            left = self.pipeline.flush_job.bytes_left
+            dt = left / self.hdd.seq_bw
+            self.pipeline.flush_progress(left)
+            nonlocal clock
+            clock += dt
+            return dt
+
+        def handle_stream(stream: list[Request]) -> None:
+            nonlocal bytes_ssd, bytes_hdd, peak_ssd, blocked_seconds
+            pct = stream_percentage(stream)
+            nbytes = sum(r.size for r in stream)
+            for r in stream:
+                per_app[r.app_id] = per_app.get(r.app_id, 0) + r.size
+
+            if self.scheme == "orangefs":
+                advance(self._hdd_stream_time(stream), nbytes, hdd_foreground=True)
+                bytes_hdd += nbytes
+                self._last_pct = pct
+                return
+
+            if self.scheme == "orangefs-bb":
+                device = Device.SSD  # plain BB caches everything it can
+            else:
+                assert self.redirector is not None
+                routed = self.redirector.route_stream(stream)
+                device = routed.device
+            self._last_pct = pct
+
+            if device is Device.SSD:
+                overflow: list[Request] = []
+                for r in stream:
+                    out = self.pipeline.append(r.file_id, r.offset, r.size)
+                    if out.blocked:
+                        if self.scheme == "orangefs-bb":
+                            # plain BB overflow goes straight to HDD while
+                            # the SSD flushes (paper Section 1, option 1);
+                            # it still passes through the server queue, so
+                            # it gets CFQ-sorted with its stream peers.
+                            overflow.append(r)
+                            continue
+                        # SSDUP/SSDUP+: wait for a region to free up
+                        blocked_seconds += drain_current_flush()
+                        out = self.pipeline.append(r.file_id, r.offset, r.size)
+                        assert out.ok, "append must succeed after drain"
+                    advance(self.ssd.write_time(r.size), r.size, hdd_foreground=False)
+                    bytes_ssd += r.size
+                if overflow:
+                    ob = sum(r.size for r in overflow)
+                    advance(self._hdd_stream_time(overflow), ob, hdd_foreground=True)
+                    bytes_hdd += ob
+                peak_ssd = max(peak_ssd, self.pipeline.buffered_bytes)
+            else:
+                advance(self._hdd_stream_time(stream), nbytes, hdd_foreground=True)
+                bytes_hdd += nbytes
+
+        # -- main loop ----------------------------------------------------
+        for item in trace:
+            if isinstance(item, Gap):
+                # compute phase: the flusher gets the HDD to itself
+                if self.pipeline is not None and self.pipeline.flush_job is not None:
+                    self.pipeline.flush_progress(int(item.seconds * self.hdd.seq_bw))
+                clock += item.seconds
+                gap_seconds += item.seconds
+                continue
+            full = grouper.push(item)
+            if full is not None:
+                handle_stream(full)
+        tail = grouper.flush()
+        if tail is not None:
+            handle_stream(tail)
+
+        io_seconds = clock - gap_seconds  # application-visible I/O time
+
+        # -- drain: flush whatever is still buffered (overlaps the NEXT
+        #    compute phase in a real deployment; excluded from io_seconds) --
+        if self.pipeline is not None:
+            self.pipeline.drain()
+            while self.pipeline.flush_job is not None:
+                job = self.pipeline.flush_job
+                clock += job.bytes_left / self.hdd.seq_bw
+                self.pipeline.flush_progress(job.bytes_left)
+                self.pipeline.force_flush()
+
+        total_bytes = bytes_ssd + bytes_hdd
+        return SimResult(
+            scheme=self.scheme,
+            io_seconds=io_seconds,
+            total_seconds=clock,
+            total_bytes=total_bytes,
+            bytes_to_ssd=bytes_ssd,
+            bytes_to_hdd_direct=bytes_hdd,
+            flushes=self.pipeline.flushes_completed if self.pipeline else 0,
+            flush_paused_seconds=(
+                self.pipeline.total_paused_seconds if self.pipeline else 0.0
+            ),
+            blocked_seconds=blocked_seconds,
+            peak_ssd_occupancy=peak_ssd,
+            metadata_bytes=self.pipeline.metadata_bytes if self.pipeline else 0,
+            per_app_bytes=per_app,
+        )
+
+
+def run_schemes(
+    trace: Sequence[TraceItem],
+    schemes: Iterable[str] = ("orangefs", "orangefs-bb", "ssdup", "ssdup+"),
+    **kwargs,
+) -> dict[str, SimResult]:
+    """Run the same trace under several schemes (paper's comparison set)."""
+
+    return {s: IONodeSimulator(scheme=s, **kwargs).run(list(trace)) for s in schemes}

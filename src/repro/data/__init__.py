@@ -1,0 +1,5 @@
+"""Data pipeline substrate."""
+
+from repro.data.pipeline import DataConfig, ShardedLoader, SyntheticTokenSource
+
+__all__ = ["DataConfig", "ShardedLoader", "SyntheticTokenSource"]

@@ -1,0 +1,19 @@
+"""Distribution substrate: sharding rules, fault tolerance, elasticity."""
+
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    constrain,
+    named_sharding,
+    spec_for,
+    tree_shardings,
+    use_mesh,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "constrain",
+    "named_sharding",
+    "spec_for",
+    "tree_shardings",
+    "use_mesh",
+]

@@ -1,0 +1,159 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, elastic remesh.
+
+Designed for the 1000+ node regime (DESIGN.md §5): every host runs a
+heartbeat reporter; the (replicated) controller view marks hosts dead after
+``timeout`` and flags stragglers by a robust p95 rule on step durations.
+Recovery actions compose with the checkpoint substrate:
+
+* dead host       -> restart from the newest committed manifest, possibly
+                     under a SMALLER data axis (elastic remesh — batch
+                     re-shards because checkpoints store logical arrays)
+* straggler       -> the data loader re-issues the slow host's shard to a
+                     backup host (work stealing); step commit waits only for
+                     the quorum
+* torn checkpoint -> invisible by construction (manifest commit point)
+
+Pure-Python state machines (deterministic, unit-testable); the wall-clock
+is injected so tests drive time explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Callable
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_heartbeat: float
+    step_durations: list[float] = dataclasses.field(default_factory=list)
+    alive: bool = True
+
+    def record_step(self, seconds: float, window: int = 64) -> None:
+        self.step_durations.append(seconds)
+        if len(self.step_durations) > window:
+            self.step_durations.pop(0)
+
+
+class HeartbeatTable:
+    """Controller-side liveness + straggler view."""
+
+    def __init__(self, timeout: float = 30.0,
+                 straggler_factor: float = 1.5,
+                 clock: Callable[[], float] | None = None):
+        self.timeout = timeout
+        self.straggler_factor = straggler_factor
+        self.clock = clock or (lambda: 0.0)
+        self.hosts: dict[int, HostState] = {}
+
+    def register(self, host_id: int) -> None:
+        self.hosts[host_id] = HostState(host_id, self.clock())
+
+    def heartbeat(self, host_id: int, step_seconds: float | None = None) -> None:
+        h = self.hosts[host_id]
+        h.last_heartbeat = self.clock()
+        h.alive = True
+        if step_seconds is not None:
+            h.record_step(step_seconds)
+
+    def dead_hosts(self) -> list[int]:
+        now = self.clock()
+        out = []
+        for h in self.hosts.values():
+            if now - h.last_heartbeat > self.timeout:
+                h.alive = False
+                out.append(h.host_id)
+        return sorted(out)
+
+    def stragglers(self) -> list[int]:
+        """Hosts whose median step exceeds straggler_factor x fleet p95-of-
+        medians floor (robust to a few noisy samples)."""
+
+        meds = {
+            h.host_id: statistics.median(h.step_durations)
+            for h in self.hosts.values()
+            if h.alive and len(h.step_durations) >= 4
+        }
+        if len(meds) < 4:
+            return []
+        fleet = statistics.median(meds.values())
+        return sorted(
+            hid for hid, m in meds.items() if m > self.straggler_factor * fleet
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    pods: int
+    data: int
+    model: int
+
+    @property
+    def n_hosts(self) -> int:
+        return self.pods * self.data * self.model
+
+    def global_batch_shards(self) -> int:
+        return self.pods * self.data
+
+
+class ElasticPlan:
+    """Shrink/grow plan when hosts die: keep the model axis intact (TP
+    groups must be complete), drop whole data-parallel replicas."""
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+
+    def replan(self, dead: list[int]) -> Topology:
+        """Map dead host ids to their data-replica index; drop those
+        replicas.  Host ids are laid out (pod, data, model) row-major."""
+
+        if not dead:
+            return self.topo
+        dead_replicas = set()
+        for hid in dead:
+            replica = hid // self.topo.model  # (pod, data) flat index
+            dead_replicas.add(replica)
+        total_replicas = self.topo.pods * self.topo.data
+        remaining = total_replicas - len(dead_replicas)
+        if remaining <= 0:
+            raise RuntimeError("no data replicas left; cannot shrink further")
+        # keep the pod structure if divisible, else collapse to one pod
+        if remaining % self.topo.pods == 0:
+            return Topology(self.topo.pods, remaining // self.topo.pods,
+                            self.topo.model)
+        return Topology(1, remaining, self.topo.model)
+
+
+@dataclasses.dataclass
+class RecoveryAction:
+    kind: str  # "restart_from_checkpoint" | "steal_shard" | "none"
+    detail: dict
+
+
+class FaultToleranceController:
+    """Glue: observe table, emit recovery actions (consumed by the trainer)."""
+
+    def __init__(self, table: HeartbeatTable, topo: Topology):
+        self.table = table
+        self.plan = ElasticPlan(topo)
+        self.topo = topo
+
+    def tick(self) -> list[RecoveryAction]:
+        actions: list[RecoveryAction] = []
+        dead = self.table.dead_hosts()
+        if dead:
+            new_topo = self.plan.replan(dead)
+            actions.append(RecoveryAction(
+                "restart_from_checkpoint",
+                {"dead_hosts": dead,
+                 "old_topology": dataclasses.asdict(self.topo),
+                 "new_topology": dataclasses.asdict(new_topo)},
+            ))
+            self.topo = new_topo
+            self.plan = ElasticPlan(new_topo)
+        for hid in self.table.stragglers():
+            actions.append(RecoveryAction(
+                "steal_shard", {"from_host": hid}))
+        return actions

@@ -1,0 +1,161 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP on one rule table).
+
+Weights and activations are annotated with *logical* axis names; this module
+maps them onto the active mesh.  The mapping enforces divisibility: a logical
+axis whose dimension does not divide the mesh axis size falls back to
+replication (e.g. starcoder2's 24 heads on a 16-way "model" axis, grok-1's 8
+experts), which is exactly the per-arch behaviour documented in DESIGN.md §5.
+
+Rule table (logical -> mesh axes, first fit that divides wins):
+
+    batch      -> ("pod", "data")   activations' batch dim (DP; pod = outer DP)
+    embed      -> "data"            weights' d_model dim (FSDP / ZeRO-3)
+    vocab      -> "model"           embedding/vocab dim (TP)
+    heads      -> "model"           attention heads (TP)
+    kv_heads   -> "model"           KV heads (TP; GQA often replicates)
+    mlp        -> "model"           FFN hidden (TP)
+    experts    -> "model"           MoE experts (EP)
+    inner      -> "model"           Mamba d_inner (TP)
+    cache_seq  -> "model"           decode KV-cache sequence dim (SP /
+                                    flash-decoding-style sharded softmax)
+    frames     -> None              encoder frames (replicated)
+    layers/state/conv/head_dim/dt_rank -> None
+
+Use :func:`use_mesh` (context manager) to activate a mesh + rules; inside it,
+:func:`constrain` applies ``with_sharding_constraint`` and the param/input
+builders return concrete ``NamedSharding`` pytrees.  Outside any context all
+of this degrades to no-ops so the same model code runs single-device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Iterable, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "cache_batch": ("pod", "data"),  # decode caches keep batch sharded even
+                                     # when activations replicate ("batch"
+                                     # overridden to ())
+    "embed": ("data",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),
+    "cache_seq": ("model",),
+    "seq": (),
+    "frames": (),
+    "layers": (),
+    "state": (),
+    "conv": (),
+    "head_dim": (),
+    "dt_rank": (),
+}
+
+
+class _Ctx(threading.local):
+    mesh: Mesh | None = None
+    rules: dict[str, tuple[str, ...]] | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None):
+    """Activate a mesh (+ optional rule overrides) for logical sharding."""
+
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def _mesh_axis_size(mesh: Mesh, names: Iterable[str]) -> int:
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical: Sequence[str | None],
+    mesh: Mesh | None = None,
+    rules: dict[str, tuple[str, ...]] | None = None,
+) -> P:
+    """PartitionSpec for ``shape`` under the rule table, divisibility-safe."""
+
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules or DEFAULT_RULES
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    assert len(shape) == len(logical), (shape, logical)
+    out: list[Any] = []
+    used: set[str] = set()  # a mesh axis may appear at most once per spec
+    for dim, name in zip(shape, logical):
+        if name is None:
+            out.append(None)
+            continue
+        axes = tuple(
+            a for a in rules.get(name, ())
+            if a in mesh.shape and a not in used
+        )
+        chosen: tuple[str, ...] | None = None
+        for k in range(len(axes), 0, -1):
+            if axes[:k] and dim % _mesh_axis_size(mesh, axes[:k]) == 0:
+                chosen = axes[:k]
+                break
+        if chosen:
+            used.update(chosen)
+            out.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(x.shape, logical, mesh))
+    )
+
+
+def named_sharding(shape: Sequence[int], logical: Sequence[str | None],
+                   mesh: Mesh | None = None) -> NamedSharding:
+    mesh = mesh or _CTX.mesh
+    assert mesh is not None, "named_sharding requires an active or given mesh"
+    return NamedSharding(mesh, spec_for(shape, logical, mesh))
+
+
+def tree_shardings(abstract_tree, logical_tree, mesh: Mesh | None = None):
+    """Nested-dict tree of ShapeDtypeStructs + matching tree of logical-axis
+    tuples -> tree of NamedShardings.  (Param trees here are nested dicts
+    with tuple leaves, so explicit recursion avoids pytree ambiguity.)"""
+
+    mesh = mesh or _CTX.mesh
+
+    def rec(a, l):
+        if isinstance(a, dict):
+            return {k: rec(a[k], l[k]) for k in a}
+        return named_sharding(a.shape, l, mesh)
+
+    return rec(abstract_tree, logical_tree)

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: FlashAttention-2 forward with GQA and causal masking.
+
+Tiling (the TPU adaptation of the CUDA original): grid is
+(B, H, Sq/bq, Sk/bk) with the KV dimension INNERMOST, so each (b, h, iq)
+output tile is revisited across ik steps while the online-softmax running
+statistics (m, l) and the f32 accumulator live in VMEM scratch.  Block
+shapes default to (bq, hd) = (256, head_dim) and (bk, hd) = (256, head_dim):
+with hd=128 that is 256x128 f32 accumulator + two 256x128 operand tiles ≈
+0.4 MiB — VMEM-safe while keeping the 128x128 MXU fully tiled (both matmul
+dims are multiples of 128 for every assigned arch except whisper's hd=64,
+which still maps onto the MXU half-tiles).
+
+Causal handling: kv blocks entirely above the diagonal are skipped via
+``pl.when`` (no wasted MXU work — this is the FA-2 trick that halves causal
+FLOPs); the diagonal block applies an elementwise mask.
+
+GQA: the k/v BlockSpec index maps head h -> h // n_rep, so grouped queries
+stream the same KV tiles without materializing repeated heads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               num_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])  # (bq, bk)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # skip kv blocks strictly above the diagonal (no query attends them)
+        needed = k_start <= q_start + block_q - 1
+        pl.when(needed)(compute)
+    else:
+        compute()
+
+    @pl.when(ik == num_k_blocks - 1)
+    def finalize():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+
+    b, h, sq, hd = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    n_rep = h // kvh
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(hd))
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+
+    from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+    try:
+        scratch = [
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ]
+    except Exception:  # pragma: no cover - older pallas
+        scratch = [
+            pl.VMEM((bq,), jnp.float32),
+            pl.VMEM((bq,), jnp.float32),
+            pl.VMEM((bq, hd), jnp.float32),
+        ]
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, block_q=bq, block_k=bk,
+        num_k_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda ib, ih, iq, ik, n_rep=n_rep: (ib, ih // n_rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda ib, ih, iq, ik, n_rep=n_rep: (ib, ih // n_rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""jit'd public wrapper for the flash_attention kernel.
+
+Accepts the model layout (B, S, H, hd) / (B, S, KV, hd) (what
+``repro.models.layers`` produces) and handles the transpose to the kernel's
+(B, H, S, hd).  Auto-selects interpret mode off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       scale: float | None = None,
+                       block_q: int = 256, block_k: int = 256,
+                       interpret: bool | None = None) -> jax.Array:
+    """(B, H, Sq, hd) x (B, KV, Sk, hd)^2 -> (B, H, Sq, hd)."""
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention(q, k, v, causal=causal, scale=scale,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+
+
+def flash_attention_bshd(q, k, v, *, causal: bool = True,
+                         scale: float | None = None,
+                         interpret: bool | None = None) -> jax.Array:
+    """Model layout: q (B, S, H, hd), k/v (B, S, KV, hd) -> (B, S, H, hd)."""
+
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    # block sizes must divide the sequence; shrink for short sequences
+    s = qt.shape[2]
+    blk = 256
+    while s % blk:
+        blk //= 2
+    out = flash_attention_op(qt, kt, vt, causal=causal, scale=scale,
+                             block_q=blk, block_k=blk, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

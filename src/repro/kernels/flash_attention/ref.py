@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash_attention kernel.
+
+Exact (non-streamed) attention with f32 softmax, GQA via KV-head grouping,
+optional causal mask.  Layout matches the kernel: q (B, H, Sq, hd),
+k/v (B, KV, Sk, hd) -> out (B, H, Sq, hd).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None) -> jnp.ndarray:
+    b, h, sq, hd = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0
+    n_rep = h // kv
+    if scale is None:
+        scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, kv, n_rep, sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg * scale, k.astype(jnp.float32))
+    if causal:
+        sk = k.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, hd).astype(q.dtype)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: Mamba-1 selective scan with VMEM-resident state.
+
+The §Perf analysis of falcon-mamba train_4k (EXPERIMENTS.md) showed the XLA
+path's memory term is dominated by the (B, chunk, d_inner, state) expansion
+that ``associative_scan`` sweeps through HBM ~log2(chunk) times.  This
+kernel is the TPU-native fix: the recurrent state lives in a VMEM scratch
+tile that PERSISTS across sequence-chunk grid steps, the (d_inner, state)
+expansion happens in registers inside a ``fori_loop`` over time, and HBM
+sees only the inputs (delta, B, C, x) once and the outputs (y, h_last)
+once — the h trajectory never leaves the chip.
+
+Tiling: grid = (batch, d_inner / BLOCK_D, seq / CHUNK) with the sequence
+dimension INNERMOST, so the (BLOCK_D, N) state scratch carries across
+chunks of the same (b, d-block) row and re-initializes at chunk 0.  With
+BLOCK_D=512, N=16, CHUNK=128: state tile 32 KiB; per-step working set
+(delta/x/y chunk tiles + B/C) ≈ 0.5 MiB — far under VMEM, and the
+sequential time loop is VPU elementwise work at full (8,128) lane width.
+
+HBM traffic: S·DI·(delta 4B + x 2B + y 2B) + S·N·8B per batch row versus
+the XLA path's ~log2(chunk)·S·DI·N·8B — a ~16x reduction for falcon-mamba
+(N=16); this is the quantitative basis for the "beyond-XLA" row in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 512
+CHUNK = 128
+
+
+def _ssm_kernel(delta_ref, b_ref, c_ref, x_ref, a_ref, y_ref, hlast_ref,
+                h_scratch, *, chunk: int, num_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    a_log = a_ref[...]  # (bd, N) — A itself (negative values)
+
+    def step(t, h):
+        d = delta_ref[0, t, :]  # (bd,)
+        a = jnp.exp(d[:, None] * a_log)  # (bd, N)
+        bx = d[:, None] * b_ref[0, t, :][None, :] * (
+            x_ref[0, t, :].astype(jnp.float32)[:, None])
+        h = a * h + bx
+        y = jnp.sum(h * c_ref[0, t, :][None, :], axis=1)  # (bd,)
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scratch[...])
+    h_scratch[...] = h
+
+    @pl.when(ic == num_chunks - 1)
+    def finalize():
+        hlast_ref[0, :, :] = h
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def ssm_scan(delta: jax.Array, B_ssm: jax.Array, C_ssm: jax.Array,
+             x: jax.Array, A: jax.Array, *, block_d: int = BLOCK_D,
+             chunk: int = CHUNK, interpret: bool = False):
+    """delta (B,S,DI) f32; B/C (B,S,N) f32; x (B,S,DI); A (DI,N) f32
+    -> (y (B,S,DI) x.dtype, h_last (B,DI,N) f32).
+
+    S must divide by ``chunk`` and DI by ``block_d`` (shrunk automatically
+    when the dims are smaller).
+    """
+
+    b, s, di = delta.shape
+    n = B_ssm.shape[-1]
+    bd = min(block_d, di)
+    ck = min(chunk, s)
+    assert di % bd == 0 and s % ck == 0, (di, bd, s, ck)
+    nd, nc = di // bd, s // ck
+
+    kernel = functools.partial(_ssm_kernel, chunk=ck, num_chunks=nc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(b, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, ck, bd), lambda ib, idd, ic: (ib, ic, idd)),
+            pl.BlockSpec((1, ck, n), lambda ib, idd, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, ck, n), lambda ib, idd, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, ck, bd), lambda ib, idd, ic: (ib, ic, idd)),
+            pl.BlockSpec((bd, n), lambda ib, idd, ic: (idd, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ck, bd), lambda ib, idd, ic: (ib, ic, idd)),
+            pl.BlockSpec((1, bd, n), lambda ib, idd, ic: (ib, idd, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, di), x.dtype),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(delta.astype(jnp.float32), B_ssm.astype(jnp.float32),
+      C_ssm.astype(jnp.float32), x, A.astype(jnp.float32))
+    return y, h_last
+
+
+def _vmem(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover - older pallas
+        return pl.VMEM(shape, dtype)

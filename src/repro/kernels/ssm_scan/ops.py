@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the ssm_scan kernel (auto-interpret off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssm_scan_op(delta, B_ssm, C_ssm, x, A, *, block_d: int = 512,
+                chunk: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ssm_scan(delta, B_ssm, C_ssm, x, A, block_d=block_d, chunk=chunk,
+                    interpret=interpret)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the ssm_scan kernel (Mamba-1 selective scan).
+
+Semantics (matches ``repro.models.layers._ssm_scan`` with A_full):
+
+    a_t  = exp(delta_t ⊗ A)                    (B, DI, N)
+    h_t  = a_t * h_{t-1} + delta_t * B_t * x_t
+    y_t  = <h_t, C_t>                           (B, DI)
+
+Computed with a plain lax.scan over time in f32 — the exact (if slow)
+reference for every kernel shape in the sweep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(delta, B_ssm, C_ssm, x, A, h0=None):
+    """delta: (B,S,DI) f32; B/C: (B,S,N) f32; x: (B,S,DI); A: (DI,N) f32.
+    Returns (y (B,S,DI) in x.dtype, h_last (B,DI,N) f32)."""
+
+    b, s, di = delta.shape
+    n = B_ssm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    def step(h, inp):
+        d, bm, cm, xc = inp  # (B,DI), (B,N), (B,N), (B,DI)
+        a = jnp.exp(d[..., None] * A[None])
+        bx = d[..., None] * bm[:, None, :] * xc.astype(jnp.float32)[..., None]
+        h = a * h + bx
+        y = jnp.einsum("bdn,bn->bd", h, cm)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(delta.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B_ssm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C_ssm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(x, 1, 0),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_last

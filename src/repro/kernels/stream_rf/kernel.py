@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: batched random-factor scoring of request streams.
+
+The paper's hot loop (sort 128 offsets, count non-contiguous neighbours) as
+a TPU data-plane op.  GPU ports of sorting lean on warp shuffles; the TPU
+adaptation (DESIGN.md §2) maps the fixed-size sort onto a **bitonic
+sorting network over the 128-lane minor axis** — no data-dependent control
+flow, every compare-exchange is a full-width vector op, and the partner
+exchange for stride j is a reshape to (..., groups, 2, j) + flip of the
+pair axis, which Mosaic lowers to lane shuffles.  Sizes ride along as a
+payload through the same network.
+
+Tiling: one VMEM block = (BLOCK_STREAMS, N) int32 for offsets + sizes plus
+a (BLOCK_STREAMS,) output tile; with BLOCK_STREAMS=256 and N=128 that is
+2 x 128 KiB in + 1 KiB out per grid step — far under the ~16 MiB VMEM
+budget, sized to keep the (8, 128) VPU tiles saturated.
+
+N must be a power of two (the stream length is the CFQ window, 128 by
+default; the host groups partial tails before calling in).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_STREAMS = 256
+
+
+def _compare_exchange(keys, payload, j: int, up_mask):
+    """One bitonic stage: partner = lane XOR j via reshape+flip."""
+
+    bs, n = keys.shape
+    g = n // (2 * j)
+
+    def partner(x):
+        return jnp.flip(x.reshape(bs, g, 2, j), axis=2).reshape(bs, n)
+
+    pk = partner(keys)
+    pp = partner(payload)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bs, n), 1)
+    first = (lane & j) == 0  # lower element of each pair
+    take_max = up_mask != first  # see bitonic min/max selection rule
+    a_is_small = keys <= pk
+    small_k = jnp.where(a_is_small, keys, pk)
+    big_k = jnp.where(a_is_small, pk, keys)
+    small_p = jnp.where(a_is_small, payload, pp)
+    big_p = jnp.where(a_is_small, pp, payload)
+    new_k = jnp.where(take_max, big_k, small_k)
+    new_p = jnp.where(take_max, big_p, small_p)
+    return new_k, new_p
+
+
+def _bitonic_sort_with_payload(keys, payload):
+    """Ascending bitonic sort along the minor axis (power-of-two length)."""
+
+    bs, n = keys.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bs, n), 1)
+    k = 2
+    while k <= n:
+        up = (lane & k) == 0
+        j = k // 2
+        while j >= 1:
+            keys, payload = _compare_exchange(keys, payload, j, up)
+            j //= 2
+        k *= 2
+    return keys, payload
+
+
+def _stream_rf_kernel(off_ref, size_ref, out_ref):
+    offs = off_ref[...]
+    szs = size_ref[...]
+    so, ss = _bitonic_sort_with_payload(offs, szs)
+    gaps = so[:, 1:] - so[:, :-1]
+    rf = (gaps != ss[:, :-1]).astype(jnp.int32)
+    out_ref[...] = jnp.sum(rf, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_streams", "interpret"))
+def stream_rf(offsets: jax.Array, sizes: jax.Array,
+              block_streams: int = BLOCK_STREAMS,
+              interpret: bool = False) -> jax.Array:
+    """Batched RF sums: (M, N) int32 offsets/sizes -> (M,) int32.
+
+    M is padded up to a multiple of ``block_streams``; N must be a power of
+    two (assignment default 128 = the CFQ queue window).
+    """
+
+    m, n = offsets.shape
+    assert n & (n - 1) == 0, f"stream length {n} must be a power of two"
+    offsets = jnp.asarray(offsets, jnp.int32)
+    sizes = jnp.broadcast_to(jnp.asarray(sizes, jnp.int32), offsets.shape)
+
+    bs = min(block_streams, m) if m else block_streams
+    pad = (-m) % bs
+    if pad:
+        # padded rows are contiguous streams -> rf 0; sliced off below
+        offsets = jnp.pad(offsets, ((0, pad), (0, 0)))
+        sizes = jnp.pad(sizes, ((0, pad), (0, 0)))
+    mp = offsets.shape[0]
+
+    out = pl.pallas_call(
+        _stream_rf_kernel,
+        grid=(mp // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, n), lambda i: (i, 0)),
+            pl.BlockSpec((bs, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.int32),
+        interpret=interpret,
+    )(offsets, sizes)
+    return out[:m]

@@ -1,0 +1,33 @@
+"""jit'd public wrapper for the stream_rf kernel.
+
+``stream_rf_op`` auto-selects interpret mode off-TPU so the same call works
+in this CPU container (correctness) and on real TPUs (performance).  The
+random *percentage* variant matches ``repro.core.random_factor``'s
+S/(N-1) definition.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stream_rf.kernel import stream_rf
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def stream_rf_op(offsets, sizes, block_streams: int = 256,
+                 interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    return stream_rf(jnp.asarray(offsets), jnp.asarray(sizes),
+                     block_streams=block_streams, interpret=interpret)
+
+
+def random_percentage_op(offsets, sizes, **kw) -> jax.Array:
+    offsets = jnp.asarray(offsets)
+    n = offsets.shape[-1]
+    s = stream_rf_op(offsets, sizes, **kw)
+    return s.astype(jnp.float32) / max(n - 1, 1)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the stream_rf kernel.
+
+Semantics = paper Eq. 1 over a batch of request streams: sort each stream's
+(offset, size) records by offset, count sorted-adjacent pairs whose gap is
+not exactly the lower record's size (each such pair costs one disk seek).
+
+This matches ``repro.core.random_factor.random_factor_batch`` (cross-checked
+in tests) and is the correctness reference for every kernel shape/dtype in
+the sweep.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stream_rf_ref(offsets: jnp.ndarray, sizes: jnp.ndarray) -> jnp.ndarray:
+    """offsets, sizes: (M, N) int32 -> rf sums (M,) int32."""
+
+    offsets = jnp.asarray(offsets, jnp.int32)
+    sizes = jnp.broadcast_to(jnp.asarray(sizes, jnp.int32), offsets.shape)
+    order = jnp.argsort(offsets, axis=-1, stable=True)
+    so = jnp.take_along_axis(offsets, order, axis=-1)
+    ss = jnp.take_along_axis(sizes, order, axis=-1)
+    gaps = so[..., 1:] - so[..., :-1]
+    return jnp.sum((gaps != ss[..., :-1]).astype(jnp.int32), axis=-1)
+
+
+def threshold_quantile_ref(percentages: jnp.ndarray, avgper: jnp.ndarray) -> jnp.ndarray:
+    """Adaptive-threshold quantile pick (paper Eq. 2) over a sorted window:
+    sort the window, index floor((1-avgper)*N), clamp.  (M, W) -> (M,)."""
+
+    w = percentages.shape[-1]
+    srt = jnp.sort(percentages, axis=-1)
+    idx = jnp.clip(((1.0 - avgper) * w).astype(jnp.int32), 0, w - 1)
+    return jnp.take_along_axis(srt, idx[..., None], axis=-1)[..., 0]

@@ -1,0 +1,12 @@
+"""Launchers: mesh construction, step builders, dry-run, train/serve CLIs."""
+
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = [
+    "make_production_mesh",
+    "make_host_mesh",
+    "make_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+]

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+Lowers + compiles every (arch x shape-cell x mesh) combination against the
+production meshes — 16x16 single-pod and 2x16x16 multi-pod — using
+ShapeDtypeStruct inputs only (no allocation), and records:
+
+* ``compiled.memory_analysis()``  (bytes per device — proves it fits)
+* ``compiled.cost_analysis()``    (per-device FLOPs / bytes)
+* the collective-bytes breakdown parsed from the post-SPMD HLO
+
+into ``experiments/dryrun/<arch>__<cell>__<mesh>.json`` (idempotent).
+
+Loop-trip-count calibration: XLA's HLO cost analysis counts a while-loop
+body ONCE, so scanned-layer models under-report FLOPs/bytes/collectives by
+~n_layers.  We therefore lower each cell twice more at small depths with
+every scan UNROLLED (repro.models.layers.unroll_scans) and extrapolate
+linearly to the real depth — all numbers still come from compiled
+artifacts.  ``roofline`` holds the corrected terms; ``roofline_raw`` the
+uncorrected ones; ``calibration`` the two measured points.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-1.7b --cell train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+
+def _depth_plan(cfg):
+    """(make_cfg(depth), d1, d2, L_eff) for linear FLOP extrapolation."""
+
+    fam = cfg.family
+    if fam == "hybrid":
+        e = cfg.shared_attn_every
+
+        def mk(g):
+            return dataclasses.replace(cfg, n_layers=g * e)
+
+        return mk, 1, 2, cfg.n_layers // e
+    if fam == "encdec":
+        def mk(d):
+            return dataclasses.replace(cfg, n_layers=d, encoder_layers=d)
+
+        return mk, 1, 2, cfg.n_layers
+    # dense / moe / vlm / ssm: depth = n_layers
+    def mk(d):
+        return dataclasses.replace(cfg, n_layers=d)
+
+    return mk, 2, 4, cfg.n_layers
+
+
+def _build_jit(cfg, cell, mesh):
+    """Build the jitted step + abstract args for one cell under a mesh.
+
+    Must be called inside ``use_mesh(mesh)``.
+    """
+
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.distributed.sharding import spec_for, tree_shardings
+    from repro.launch.steps import (
+        make_prefill_step,
+        make_serve_step,
+        make_train_step,
+    )
+    from repro.models import get_model, input_axes, input_specs
+    from repro.optim import abstract_state
+
+    model = get_model(cfg)
+    aparams = model.abstract_params()
+    paxes = model.param_axes()
+    pshard = tree_shardings(aparams, paxes, mesh)
+    binputs = input_specs(cfg, cell.kind, cell.global_batch, cell.seq_len)
+    baxes = input_axes(cfg, cell.kind)
+    bshard = {
+        k: NamedSharding(mesh, spec_for(binputs[k].shape, baxes[k], mesh))
+        for k in binputs
+    }
+
+    if cell.kind == "train":
+        ostate = abstract_state(aparams)
+        oshard = tree_shardings(
+            {"m": aparams, "v": aparams}, {"m": paxes, "v": paxes}, mesh)
+        oshard["step"] = NamedSharding(mesh, spec_for((), (), mesh))
+        jf = jax.jit(
+            make_train_step(model),
+            in_shardings=(pshard, oshard, bshard),
+            donate_argnums=(0, 1),
+        )
+        args = (aparams, ostate, binputs)
+    elif cell.kind == "prefill":
+        jf = jax.jit(make_prefill_step(model), in_shardings=(pshard, bshard))
+        args = (aparams, binputs)
+    else:  # decode
+        acache = model.abstract_cache(cell.global_batch, cell.seq_len)
+        cshard = tree_shardings(acache, model.cache_axes(), mesh)
+        jf = jax.jit(
+            make_serve_step(model),
+            in_shardings=(
+                pshard, cshard, bshard["tokens"],
+                NamedSharding(mesh, spec_for((), (), mesh)),
+            ),
+            donate_argnums=(1,),
+        )
+        args = (aparams, acache, binputs["tokens"],
+                jax.ShapeDtypeStruct((), jax.numpy.int32))
+    return jf, args
+
+
+def _rules(cfg):
+    return dict(cfg.shard_rules_override) if cfg.shard_rules_override else None
+
+
+def _measure(cfg, cell, mesh):
+    """Lower+compile one cell; return (compiled, flops, bytes, link_bytes)."""
+
+    from repro.distributed.sharding import use_mesh
+    from repro.launch.roofline import parse_collectives
+
+    with use_mesh(mesh, rules=_rules(cfg)):
+        jf, args = _build_jit(cfg, cell, mesh)
+        compiled = jf.lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    return compiled, float(ca.get("flops", 0.0)), float(
+        ca.get("bytes accessed", 0.0)), colls
+
+
+def _measure_lowered_flops(cfg, cell, mesh) -> float:
+    """GLOBAL (pre-SPMD) flops from the unoptimized lowering — cheap
+    (seconds), exact for flop counting; used for the heavy ssm/hybrid
+    calibrations where the unrolled backend compile takes minutes."""
+
+    from repro.distributed.sharding import use_mesh
+
+    with use_mesh(mesh, rules=_rules(cfg)):
+        jf, args = _build_jit(cfg, cell, mesh)
+        ca = jf.lower(*args).cost_analysis() or {}
+    return float(ca.get("flops", 0.0))
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False, save_hlo: bool = False,
+             override_cfg=None, tag: str = "", calibrate: bool = True) -> dict:
+    from repro.configs import SHAPE_CELLS, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.roofline import (
+        RooflineTerms,
+        derive_terms,
+        model_flops_per_step,
+        HBM_BW,
+        ICI_BW,
+        PEAK_FLOPS,
+    )
+    from repro.models.layers import unroll_scans
+
+    name = f"{arch}__{cell_name}__{mesh_kind}{tag}"
+    out_path = os.path.join(out_dir, name + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = override_cfg if override_cfg is not None else get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    record: dict = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "status": "running",
+    }
+
+    t0 = time.time()
+    compiled, flops_raw, bytes_raw, colls = _measure(cfg, cell, mesh)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    print(mem)  # proves it fits
+    hlo_len = len(compiled.as_text())
+    raw_terms = derive_terms(
+        {"flops": flops_raw, "bytes accessed": bytes_raw}, colls)
+
+    # ---- loop-trip calibration (small unrolled depths, extrapolated) ----
+    calib_rec = None
+    terms = raw_terms
+    if calibrate:
+        from repro.models.layers import attn_q_chunk
+
+        mk, d1, d2, L_eff = _depth_plan(cfg)
+        # widen chunk sizes during calibration: same FLOPs (chunk-size
+        # invariant), negligibly fewer boundary-state bytes, but far fewer
+        # unrolled bodies -> tractable compiles for the 32k/500k cells
+        calib_scan_chunk = max(cfg.scan_chunk, cell.seq_len // 4)
+        calib_q_chunk = max(512, cell.seq_len // 4)
+        n_chips_ = 1
+        for v in mesh.shape.values():
+            n_chips_ *= v
+
+        # ssm/hybrid train/prefill: the unrolled chunk-scan bodies make the
+        # backend compile take minutes, so calibrate FLOPs from the cheap
+        # unoptimized lowering (exact) and scale bytes/link by the same
+        # loop-multiplier (trunk layers are homogeneous -> first-order
+        # correct); everything else gets the full compiled 2-point method.
+        heavy = cfg.family in ("ssm", "hybrid") and cell.kind in (
+            "train", "prefill")
+        if heavy:
+            pts = {}
+            with unroll_scans(), attn_q_chunk(calib_q_chunk):
+                for d in (d1, d2):
+                    ccfg = dataclasses.replace(
+                        mk(d), scan_chunk=calib_scan_chunk)
+                    pts[d] = _measure_lowered_flops(ccfg, cell, mesh)
+            slope = (pts[d2] - pts[d1]) / (d2 - d1)
+            flops_global = max(pts[d2] + (L_eff - d2) * slope, 0.0)
+            flops_c = flops_global / n_chips_
+            ratio = flops_c / flops_raw if flops_raw else 1.0
+            bytes_c = bytes_raw * ratio
+            link_c = colls.link_bytes * ratio
+            calib_rec = {
+                "method": "flops-ratio-scaled",
+                "depths": [d1, d2], "L_eff": L_eff,
+                "points": {str(d): {"flops_global": pts[d]} for d in pts},
+                "loop_multiplier": ratio,
+            }
+        else:
+            pts = {}
+            with unroll_scans(), attn_q_chunk(calib_q_chunk):
+                for d in (d1, d2):
+                    ccfg = dataclasses.replace(
+                        mk(d), scan_chunk=calib_scan_chunk)
+                    _, fl, by, cl = _measure(ccfg, cell, mesh)
+                    pts[d] = (fl, by, cl.link_bytes)
+
+            def extrap(i):
+                v1, v2 = pts[d1][i], pts[d2][i]
+                slope = (v2 - v1) / (d2 - d1)
+                return max(v2 + (L_eff - d2) * slope, 0.0)
+
+            flops_c, bytes_c, link_c = extrap(0), extrap(1), extrap(2)
+            calib_rec = {
+                "method": "unrolled-2pt",
+                "depths": [d1, d2], "L_eff": L_eff,
+                "points": {str(d): {"flops": pts[d][0], "bytes": pts[d][1],
+                                    "link_bytes": pts[d][2]} for d in pts},
+            }
+        terms = RooflineTerms(
+            flops=flops_c, bytes_accessed=bytes_c, link_bytes=link_c,
+            compute_s=flops_c / PEAK_FLOPS,
+            memory_s=bytes_c / HBM_BW,
+            collective_s=link_c / ICI_BW,
+        )
+
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    model_flops = model_flops_per_step(cfg, cell)
+    hlo_flops_global = terms.flops * n_chips
+    record.update(
+        status="ok",
+        compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_live_bytes_est": mem.temp_size_in_bytes
+            + mem.argument_size_in_bytes,
+        },
+        collectives=colls.as_dict(),
+        roofline=terms.as_dict(),
+        roofline_raw=raw_terms.as_dict(),
+        calibration=calib_rec,
+        model_flops=model_flops,
+        useful_flops_ratio=(
+            model_flops / hlo_flops_global if hlo_flops_global else None
+        ),
+        hlo_bytes=hlo_len,
+    )
+    if save_hlo:
+        with open(os.path.join(out_dir, name + ".hlo.txt"), "w") as f:
+            f.write(compiled.as_text())
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> None:
+    from repro.configs import ARCHITECTURES, applicable_cells, get_config
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        archs = ARCHITECTURES
+    else:
+        assert args.arch, "--arch or --all required"
+        archs = [args.arch]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = [args.cell] if args.cell else applicable_cells(cfg)
+        for cell in cells:
+            for mesh_kind in meshes:
+                label = f"{arch} x {cell} x {mesh_kind}"
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, cell, mesh_kind, args.out,
+                                   force=args.force, save_hlo=args.save_hlo,
+                                   calibrate=not args.no_calibrate)
+                    dom = rec.get("roofline", {}).get("dominant", "?")
+                    print(f"[dryrun] OK   {label:55s} {time.time()-t0:7.1f}s "
+                          f"dominant={dom}", flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    failures.append((label, repr(e)))
+                    traceback.print_exc()
+                    print(f"[dryrun] FAIL {label:55s} {time.time()-t0:7.1f}s "
+                          f"{e!r:.120}", flush=True)
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for label, err in failures:
+            print("  ", label, err[:160])
+        raise SystemExit(1)
+    print("\n[dryrun] all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production meshes (assignment: 16x16 single-pod, 2x16x16 multi-pod).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state.  The dry-run environment exposes 512 host-platform
+placeholder devices; the single-pod mesh takes the first 256.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    try:
+        return jax.make_mesh(
+            shape, axes, devices=devices[:ndev],
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    except TypeError:  # older jax without the devices kwarg
+        from jax.sharding import Mesh
+
+        return Mesh(np.asarray(devices[:ndev]).reshape(shape), axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """A tiny mesh over the real local devices (tests / examples)."""
+
+    import jax
+
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh(
+        (data, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

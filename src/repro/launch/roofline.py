@@ -1,0 +1,181 @@
+"""Roofline-term derivation from compiled SPMD artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh) cell, all per-device (verified:
+``compiled.cost_analysis()['flops']`` is per-device on this jax version —
+probe in DESIGN.md §6):
+
+    compute_term    = flops / PEAK_FLOPS
+    memory_term     = bytes_accessed / HBM_BW
+    collective_term = sum(link_bytes per collective) / ICI_BW
+
+collective bytes are parsed from the post-SPMD HLO text: for every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+op we take the output tuple's byte size and weight it with the standard
+ring-algorithm factor over the parsed replica-group size n:
+
+    all-reduce      2 (n-1)/n        all-gather / reduce-scatter  (n-1)/n
+    all-to-all      (n-1)/n          collective-permute           1
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=")
+
+_FACTORS = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Byte size of 'bf16[16,64]' or a '(t1, t2, ...)' tuple thereof."""
+
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups, group_size]<=[N]
+        return int(m.group(2))
+    return 2  # conservative default (pairwise)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+    link_bytes: float  # factor-weighted bytes over the wire (per device)
+
+    def as_dict(self):
+        return {
+            "counts": self.counts,
+            "bytes_by_kind": self.bytes_by_kind,
+            "link_bytes": self.link_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    raw: dict[str, float] = {}
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        shape_txt, kind, _start = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(shape_txt)
+        n = _group_size(line)
+        if kind == "collective-permute":
+            n = 2
+        counts[kind] = counts.get(kind, 0) + 1
+        raw[kind] = raw.get(kind, 0.0) + nbytes
+        link += _FACTORS[kind](max(n, 2)) * nbytes
+    return CollectiveStats(counts=counts, bytes_by_kind=raw, link_bytes=link)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    link_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate (no overlap: max of the terms)."""
+
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self):
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "link_bytes_per_device": self.link_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def derive_terms(cost_analysis: dict, collectives: CollectiveStats) -> RooflineTerms:
+    flops = float(cost_analysis.get("flops", 0.0))
+    bytes_acc = float(cost_analysis.get("bytes accessed", 0.0))
+    link = collectives.link_bytes
+    return RooflineTerms(
+        flops=flops,
+        bytes_accessed=bytes_acc,
+        link_bytes=link,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_acc / HBM_BW,
+        collective_s=link / ICI_BW,
+    )
+
+
+def model_flops_per_step(cfg, cell) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) per optimizer step; for serve
+    cells D = global_batch tokens (one token per sequence), forward-only
+    (2*N*D)."""
+
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch

@@ -1,0 +1,95 @@
+"""Batched serving driver: prefill a prompt batch, decode N tokens.
+
+Exercises the serve path the decode_* dry-run cells lower: prefill emits a
+KV cache padded to the decode horizon, then serve_step appends one token at
+a time (greedy).
+
+    PYTHONPATH=src python -m repro.launch.serve --preset tiny --batch 4 \
+        --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.train import PRESETS
+from repro.models import get_model
+
+
+def pad_cache(cache, extra: int):
+    """Grow attention caches' sequence axis (axis 2) by ``extra`` slots."""
+
+    def pad(path_key, x):
+        if path_key in ("k", "v", "attn_k", "attn_v"):
+            return jnp.pad(x, [(0, extra) if i == 2 else (0, 0)
+                               for i in range(x.ndim)])
+        return x
+
+    return {k: pad(k, v) for k, v in cache.items()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.arch else PRESETS[args.preset]
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init_params(key)
+    print(f"[serve] model={cfg.name} family={cfg.family} "
+          f"batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros(
+            (args.batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+
+    prefill = jax.jit(make_prefill_step(model))
+    serve = jax.jit(make_serve_step(model), donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        cache = pad_cache(cache, args.gen)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        tok, _logits, cache = serve(params, cache, tok, pos)
+        out.append(np.asarray(tok))
+    t_decode = time.time() - t0
+
+    gen = np.concatenate(out, axis=1)
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms; "
+          f"decode {t_decode*1e3:.1f} ms "
+          f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s)")
+    for b in range(min(args.batch, 2)):
+        print(f"[serve] seq{b}: {gen[b][:16].tolist()}...")
+    assert gen.shape == (args.batch, args.gen)
+    assert np.all(gen >= 0) and np.all(gen < cfg.padded_vocab)
+    print("[serve] ok")
+
+
+if __name__ == "__main__":
+    main()

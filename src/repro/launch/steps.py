@@ -1,0 +1,78 @@
+"""jit-able step functions (train / prefill / serve) over a ModelApi."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelApi
+from repro.optim import (
+    AdamWConfig,
+    CompressionConfig,
+    apply_updates,
+    compress_tree,
+)
+
+Tree = Any
+
+
+def make_train_step(model: ModelApi, opt_cfg: AdamWConfig | None = None,
+                    comp_cfg: CompressionConfig | None = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    comp_cfg = comp_cfg or CompressionConfig()
+    mb = model.cfg.microbatch
+
+    def grads_of(params: Tree, batch: dict):
+        if not mb:
+            return jax.value_and_grad(model.loss_fn)(params, batch)
+        # gradient accumulation over microbatches (activation memory ~ mb/B;
+        # also the natural unit for compute/comm overlap — each microbatch's
+        # reduce-scatter pipelines behind the next microbatch's compute)
+        from repro.models.layers import scan as _scan  # unroll-aware
+
+        b = batch["tokens"].shape[0]
+        assert b % mb == 0, (b, mb)
+        a = b // mb
+        resh = jax.tree.map(lambda x: x.reshape(a, mb, *x.shape[1:]), batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc(carry, mbatch):
+            loss_sum, gsum = carry
+            l, g = jax.value_and_grad(model.loss_fn)(params, mbatch)
+            gsum = jax.tree.map(
+                lambda s, x: s + x.astype(jnp.float32), gsum, g)
+            return (loss_sum + l, gsum), None
+
+        (loss_sum, gsum), _ = _scan(acc, (jnp.float32(0.0), zeros), resh)
+        inv = 1.0 / a
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(params: Tree, opt_state: Tree, batch: dict):
+        loss, grads = grads_of(params, batch)
+        # cross-pod gradient compression (identity when disabled)
+        grads, _err = compress_tree(grads, None, comp_cfg)
+        params, opt_state, metrics = apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: ModelApi):
+    def prefill_step(params: Tree, batch: dict):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: ModelApi):
+    def serve_step(params: Tree, cache: Tree, tokens: jax.Array,
+                   pos: jax.Array):
+        logits, new_cache = model.decode_step(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_cache
+
+    return serve_step

@@ -1,0 +1,5 @@
+"""Assigned-architecture model zoo (see DESIGN.md §4)."""
+
+from repro.models.registry import ModelApi, get_model, input_axes, input_specs
+
+__all__ = ["ModelApi", "get_model", "input_specs", "input_axes"]

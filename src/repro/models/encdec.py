@@ -1,0 +1,279 @@
+"""Encoder-decoder trunk (Whisper-tiny family).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, n_frames, D) — i.e. the output of
+Whisper's two conv layers.  Sinusoidal positions on both stacks, LayerNorm,
+GELU MLP, MHA (kv == heads), no RoPE; biases omitted (documented
+simplification, DESIGN.md §8).
+
+Decode shapes lower the *decoder* serve step: self-attention KV cache of the
+assigned context length + precomputed cross-attention KV over the frames.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+Tree = dict
+
+
+def _sinusoid(length: int, dim: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * i / dim)
+    return np.concatenate([np.sin(angle), np.cos(angle)], axis=-1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _attn_specs(nl: int, cfg: ModelConfig, prefix: str):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    return {
+        f"{prefix}wq": ((nl, D, H, hd), ("layers", "embed", "heads", None)),
+        f"{prefix}wk": ((nl, D, KV, hd), ("layers", "embed", "kv_heads", None)),
+        f"{prefix}wv": ((nl, D, KV, hd), ("layers", "embed", "kv_heads", None)),
+        f"{prefix}wo": ((nl, H, hd, D), ("layers", "heads", None, "embed")),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    V, D, F = cfg.padded_vocab, cfg.d_model, cfg.d_ff
+    ne, nd = cfg.encoder_layers, cfg.n_layers
+    enc: Tree = {
+        "attn_norm": ((ne, D), ("layers", None)),
+        "attn_norm_b": ((ne, D), ("layers", None)),
+        "mlp_norm": ((ne, D), ("layers", None)),
+        "mlp_norm_b": ((ne, D), ("layers", None)),
+        "w1": ((ne, D, F), ("layers", "embed", "mlp")),
+        "w2": ((ne, F, D), ("layers", "mlp", "embed")),
+        **_attn_specs(ne, cfg, ""),
+    }
+    dec: Tree = {
+        "self_norm": ((nd, D), ("layers", None)),
+        "self_norm_b": ((nd, D), ("layers", None)),
+        "cross_norm": ((nd, D), ("layers", None)),
+        "cross_norm_b": ((nd, D), ("layers", None)),
+        "mlp_norm": ((nd, D), ("layers", None)),
+        "mlp_norm_b": ((nd, D), ("layers", None)),
+        "w1": ((nd, D, F), ("layers", "embed", "mlp")),
+        "w2": ((nd, F, D), ("layers", "mlp", "embed")),
+        **_attn_specs(nd, cfg, "self_"),
+        **_attn_specs(nd, cfg, "cross_"),
+    }
+    return {
+        "tok_emb": ((V, D), ("vocab", "embed")),
+        "enc_final_norm": ((D,), (None,)),
+        "enc_final_norm_b": ((D,), (None,)),
+        "dec_final_norm": ((D,), (None,)),
+        "dec_final_norm_b": ((D,), (None,)),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def _map_specs(specs: Tree, fn) -> Tree:
+    return {
+        k: (_map_specs(v, fn) if isinstance(v, dict) else fn(*v))
+        for k, v in specs.items()
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    dt = L.dtype_of(cfg)
+    return _map_specs(param_specs(cfg), lambda sh, ax: jax.ShapeDtypeStruct(sh, dt))
+
+
+def param_axes(cfg: ModelConfig) -> Tree:
+    return _map_specs(param_specs(cfg), lambda sh, ax: ax)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    dt = L.dtype_of(cfg)
+    counter = [0]
+    specs = param_specs(cfg)
+
+    def walk(t):
+        out = {}
+        for k, v in t.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                sh, ax = v
+                if "norm" in k and not k.endswith("_b"):
+                    out[k] = jnp.ones(sh, dt)
+                elif k.endswith("_b"):
+                    out[k] = jnp.zeros(sh, dt)
+                else:
+                    counter[0] += 1
+                    kk = jax.random.fold_in(key, counter[0])
+                    out[k] = (jax.random.normal(kk, sh, jnp.float32) * 0.02).astype(dt)
+        return out
+
+    return walk(specs)
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder blocks
+# ---------------------------------------------------------------------------
+
+def _sub(w: Tree, prefix: str) -> Tree:
+    return {k[len(prefix):]: v for k, v in w.items() if k.startswith(prefix)}
+
+
+def encode(cfg: ModelConfig, params: Tree, frames: jax.Array) -> jax.Array:
+    dt = L.dtype_of(cfg)
+    T = frames.shape[1]
+    x = frames.astype(dt) + jnp.asarray(
+        _sinusoid(T, cfg.d_model), dt
+    )[None]
+    x = constrain(x, "batch", "frames", None)
+    positions = jnp.arange(T)
+
+    def body(carry, w):
+        h = L.layer_norm(carry, w["attn_norm"], w["attn_norm_b"], cfg.norm_eps)
+        attn_w = {k: w[k] for k in ("wq", "wk", "wv", "wo")}
+        o, _ = L.attention(cfg, attn_w, h, positions=positions, causal=False)
+        x1 = carry + o
+        h = L.layer_norm(x1, w["mlp_norm"], w["mlp_norm_b"], cfg.norm_eps)
+        x2 = x1 + L.mlp(cfg, w, h)
+        return x2, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = L.scan(body, x, params["encoder"])
+    return L.layer_norm(x, params["enc_final_norm"], params["enc_final_norm_b"],
+                        cfg.norm_eps)
+
+
+def _decoder_pass(cfg: ModelConfig, params: Tree, tokens: jax.Array,
+                  enc_out: jax.Array, collect_cache: bool = False):
+    dt = L.dtype_of(cfg)
+    S = tokens.shape[1]
+    x = L.embed_tokens(cfg, params["tok_emb"], tokens)
+    x = x + jnp.asarray(_sinusoid(S, cfg.d_model), dt)[None]
+    positions = jnp.arange(S)
+    enc_positions = jnp.arange(enc_out.shape[1])
+
+    def body(carry, w):
+        h = L.layer_norm(carry, w["self_norm"], w["self_norm_b"], cfg.norm_eps)
+        self_w = _sub(w, "self_")
+        o, cache = L.attention(cfg, self_w, h, positions=positions, causal=True)
+        x1 = carry + o
+        # cross attention: project encoder K/V with this layer's weights
+        cross_w = _sub(w, "cross_")
+        ck = jnp.einsum("btd,dhk->bthk", enc_out, cross_w["wk"])
+        cv = jnp.einsum("btd,dhk->bthk", enc_out, cross_w["wv"])
+        h = L.layer_norm(x1, w["cross_norm"], w["cross_norm_b"], cfg.norm_eps)
+        o, _ = L.attention(cfg, cross_w, h, positions=positions,
+                           cross_kv=(ck, cv))
+        x2 = x1 + o
+        h = L.layer_norm(x2, w["mlp_norm"], w["mlp_norm_b"], cfg.norm_eps)
+        x3 = x2 + L.mlp(cfg, w, h)
+        ys = (cache, (ck, cv)) if collect_cache else None
+        return x3, ys
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, ys = L.scan(body, x, params["decoder"])
+    x = L.layer_norm(x, params["dec_final_norm"], params["dec_final_norm_b"],
+                     cfg.norm_eps)
+    return x, ys
+
+
+def loss_fn(cfg: ModelConfig, params: Tree, batch: dict) -> jax.Array:
+    enc_out = encode(cfg, params, batch["frames"])
+    hidden, _ = _decoder_pass(cfg, params, batch["tokens"], enc_out)
+    logits = jnp.einsum("bsd,vd->bsv", hidden, params["tok_emb"])  # tied head
+    logits = constrain(logits, "batch", None, "vocab")
+    return L.cross_entropy(cfg, logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Tree, batch: dict):
+    enc_out = encode(cfg, params, batch["frames"])
+    hidden, ys = _decoder_pass(cfg, params, batch["tokens"], enc_out,
+                               collect_cache=True)
+    (k, v), (ck, cv) = ys
+    cache = {
+        "k": constrain(k, None, "batch", "cache_seq", None, None),
+        "v": constrain(v, None, "batch", "cache_seq", None, None),
+        "cross_k": ck,
+        "cross_v": cv,
+    }
+    logits = jnp.einsum("bsd,vd->bsv", hidden[:, -1:, :], params["tok_emb"])
+    return constrain(logits, "batch", None, "vocab"), cache
+
+
+def _sinusoid_at(pos: jax.Array, dim: int) -> jax.Array:
+    """Sinusoidal position row for a dynamic position (decode step)."""
+
+    i = jnp.arange(dim // 2, dtype=jnp.float32)
+    angle = pos.astype(jnp.float32) / jnp.power(10_000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def decode_step(cfg: ModelConfig, params: Tree, cache: dict,
+                tokens: jax.Array, pos: jax.Array):
+    dt = L.dtype_of(cfg)
+    x = L.embed_tokens(cfg, params["tok_emb"], tokens)
+    x = x + _sinusoid_at(pos, cfg.d_model).astype(dt)[None, None, :]
+    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+
+    def body(carry, inp):
+        w, ck_self, cv_self, ck_x, cv_x = inp
+        h = L.layer_norm(carry, w["self_norm"], w["self_norm_b"], cfg.norm_eps)
+        self_w = _sub(w, "self_")
+        o, new_cache = L.attention(cfg, self_w, h, positions=positions,
+                                   kv_cache=(ck_self, cv_self),
+                                   cache_position=pos)
+        x1 = carry + o
+        cross_w = _sub(w, "cross_")
+        h = L.layer_norm(x1, w["cross_norm"], w["cross_norm_b"], cfg.norm_eps)
+        o, _ = L.attention(cfg, cross_w, h, positions=positions,
+                           cross_kv=(ck_x, cv_x))
+        x2 = x1 + o
+        h = L.layer_norm(x2, w["mlp_norm"], w["mlp_norm_b"], cfg.norm_eps)
+        x3 = x2 + L.mlp(cfg, w, h)
+        return x3, new_cache
+
+    x, (k, v) = L.scan(
+        body, x,
+        (params["decoder"], cache["k"], cache["v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    x = L.layer_norm(x, params["dec_final_norm"], params["dec_final_norm_b"],
+                     cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["tok_emb"])
+    new_cache = dict(cache)
+    new_cache["k"] = constrain(k, None, "batch", "cache_seq", None, None)
+    new_cache["v"] = constrain(v, None, "batch", "cache_seq", None, None)
+    return constrain(logits, "batch", None, "vocab"), new_cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> Tree:
+    dt = L.dtype_of(cfg)
+    kv = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim_)
+    cross = (cfg.n_layers, batch, cfg.n_frames, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, dt),
+        "v": jax.ShapeDtypeStruct(kv, dt),
+        "cross_k": jax.ShapeDtypeStruct(cross, dt),
+        "cross_v": jax.ShapeDtypeStruct(cross, dt),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> Tree:
+    kv = ("layers", "cache_batch", "cache_seq", "kv_heads", None)
+    cross = ("layers", "cache_batch", "frames", "kv_heads", None)
+    return {"k": kv, "v": kv, "cross_k": cross, "cross_v": cross}

@@ -1,0 +1,235 @@
+"""Hybrid SSM + shared-attention LM (zamba2-2.7b family).
+
+Mamba-2 backbone with ONE shared attention+MLP block (a single weight set)
+applied after every ``cfg.shared_attn_every``-th Mamba layer — Zamba2's
+weight-shared global block.  (Zamba2's embedding-concat input to the shared
+block and its per-application LoRA deltas are omitted; DESIGN.md §8.)
+
+Structure: layers are grouped as ``n_groups = n_layers // every`` groups of
+``every`` Mamba layers followed by one shared-attention application.  Decode
+carries ``n_groups`` KV caches for the shared block plus per-layer SSM
+states; with the cache sequence dim sharded over "model", the hybrid runs
+the long_500k cell (one O(S) cache sweep for 9 shared applications + O(1)
+SSM state updates).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.layers import SSMState
+
+Tree = dict
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    assert cfg.shared_attn_every > 0
+    assert cfg.n_layers % cfg.shared_attn_every == 0, (
+        cfg.n_layers, cfg.shared_attn_every)
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    V, D, F = cfg.padded_vocab, cfg.d_model, cfg.d_ff
+    di, n, K = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    nh = cfg.mamba_heads
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g, e = n_groups(cfg), cfg.shared_attn_every
+    conv_ch = di + 2 * n  # mamba-2 convolves x, B and C together
+    mamba = {
+        "norm": ((g, e, D), ("layers", None, None)),
+        "in_proj": ((g, e, D, 2 * di + 2 * n + nh), ("layers", None, "embed", "inner")),
+        "conv_w": ((g, e, K, conv_ch), ("layers", None, None, "inner")),
+        "conv_b": ((g, e, conv_ch), ("layers", None, "inner")),
+        "dt_bias": ((g, e, nh), ("layers", None, None)),
+        "A_log": ((g, e, nh), ("layers", None, None)),
+        "D": ((g, e, nh), ("layers", None, None)),
+        "out_norm": ((g, e, di), ("layers", None, "inner")),
+        "out_proj": ((g, e, di, D), ("layers", None, "inner", "embed")),
+    }
+    shared = {
+        "attn_norm": ((D,), (None,)),
+        "mlp_norm": ((D,), (None,)),
+        "wq": ((D, H, hd), ("embed", "heads", None)),
+        "wk": ((D, KV, hd), ("embed", "kv_heads", None)),
+        "wv": ((D, KV, hd), ("embed", "kv_heads", None)),
+        "wo": ((H, hd, D), ("heads", None, "embed")),
+        "w1": ((D, F), ("embed", "mlp")),
+        "w3": ((D, F), ("embed", "mlp")),
+        "w2": ((F, D), ("mlp", "embed")),
+    }
+    return {
+        "tok_emb": ((V, D), ("vocab", "embed")),
+        "final_norm": ((D,), (None,)),
+        "lm_head": ((D, V), ("embed", "vocab")),
+        "mamba": mamba,
+        "shared": shared,
+    }
+
+
+def _map_specs(specs: Tree, fn) -> Tree:
+    return {
+        k: (_map_specs(v, fn) if isinstance(v, dict) else fn(*v))
+        for k, v in specs.items()
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    dt = L.dtype_of(cfg)
+    return _map_specs(param_specs(cfg), lambda sh, ax: jax.ShapeDtypeStruct(sh, dt))
+
+
+def param_axes(cfg: ModelConfig) -> Tree:
+    return _map_specs(param_specs(cfg), lambda sh, ax: ax)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    dt = L.dtype_of(cfg)
+    counter = [0]
+
+    def walk(t):
+        out = {}
+        for k, v in t.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+                continue
+            sh, _ax = v
+            counter[0] += 1
+            kk = jax.random.fold_in(key, counter[0])
+            if "norm" in k or k == "D":
+                out[k] = jnp.ones(sh, dt)
+            elif k == "A_log":
+                out[k] = jnp.zeros(sh, jnp.float32)  # A = -1 per head
+            elif k == "dt_bias":
+                out[k] = jnp.full(sh, -4.6, jnp.float32)
+            elif k.endswith("_b"):
+                out[k] = jnp.zeros(sh, dt)
+            else:
+                out[k] = (jax.random.normal(kk, sh, jnp.float32) * 0.02).astype(dt)
+        return out
+
+    return walk(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _run(cfg: ModelConfig, params: Tree, tokens: jax.Array,
+         positions: jax.Array, state: Tree | None,
+         cache_position=None, collect_state: bool = False):
+    """state (decode): {"conv": (G,E,B,K-1,C), "h": (G,E,B,DI,N),
+    "attn_k"/"attn_v": (G,B,S,KV,hd)}."""
+
+    x = L.embed_tokens(cfg, params["tok_emb"], tokens)
+    shared = params["shared"]
+    want_state = collect_state or state is not None
+
+    def group_body(carry, inp):
+        if state is None:
+            gw = inp
+            conv = h = ck = cv = None
+        else:
+            gw, conv, h, ck, cv = inp
+
+        def layer_body(c, linp):
+            if state is None:
+                lw = linp
+                st = None
+            else:
+                lw, lconv, lh = linp
+                st = SSMState(conv=lconv, h=lh)
+            y, ns = L.mamba2_block(
+                cfg, lw, L.rms_norm(c, lw["norm"], cfg.norm_eps), st)
+            ys = (ns.conv, ns.h) if want_state else None
+            return c + y, ys
+
+        if cfg.remat == "block":
+            layer_body = jax.checkpoint(layer_body)
+        xs = gw if state is None else (gw, conv, h)
+        y, lys = L.scan(layer_body, carry, xs)
+
+        # shared attention + MLP application
+        hn = L.rms_norm(y, shared["attn_norm"], cfg.norm_eps)
+        if state is None:
+            o, cache = L.attention(cfg, shared, hn, positions=positions)
+        else:
+            o, cache = L.attention(cfg, shared, hn, positions=positions,
+                                   kv_cache=(ck, cv),
+                                   cache_position=cache_position)
+        y = y + o
+        hn = L.rms_norm(y, shared["mlp_norm"], cfg.norm_eps)
+        y = y + L.mlp(cfg, shared, hn)
+        ys_out = None
+        if want_state:
+            conv_s, h_s = lys
+            ys_out = (conv_s, h_s, cache[0], cache[1])
+        return y, ys_out
+
+    if state is None:
+        xs = params["mamba"]
+    else:
+        xs = (params["mamba"], state["conv"], state["h"],
+              state["attn_k"], state["attn_v"])
+    x, ys = L.scan(group_body, x, xs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_state = None
+    if want_state and ys is not None:
+        conv_s, h_s, ak, av = ys
+        new_state = {
+            "conv": conv_s, "h": h_s,
+            "attn_k": constrain(ak, None, "batch", "cache_seq", None, None),
+            "attn_v": constrain(av, None, "batch", "cache_seq", None, None),
+        }
+    return x, new_state
+
+
+def loss_fn(cfg: ModelConfig, params: Tree, batch: dict) -> jax.Array:
+    positions = jnp.arange(batch["tokens"].shape[1])
+    hidden, _ = _run(cfg, params, batch["tokens"], positions, None)
+    logits = L.lm_logits(cfg, params, hidden)
+    return L.cross_entropy(cfg, logits, batch["labels"])
+
+
+def prefill(cfg: ModelConfig, params: Tree, batch: dict):
+    positions = jnp.arange(batch["tokens"].shape[1])
+    hidden, st = _run(cfg, params, batch["tokens"], positions, None,
+                      collect_state=True)
+    logits = L.lm_logits(cfg, params, hidden[:, -1:, :])
+    return logits, st
+
+
+def decode_step(cfg: ModelConfig, params: Tree, state: Tree,
+                tokens: jax.Array, pos: jax.Array):
+    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+    hidden, new_state = _run(cfg, params, tokens, positions, state,
+                             cache_position=pos)
+    logits = L.lm_logits(cfg, params, hidden)
+    return logits, new_state
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> Tree:
+    dt = L.dtype_of(cfg)
+    g, e = n_groups(cfg), cfg.shared_attn_every
+    di, n, K = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    conv_ch = di + 2 * n
+    kv = (g, batch, seq, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "conv": jax.ShapeDtypeStruct((g, e, batch, K - 1, conv_ch), dt),
+        "h": jax.ShapeDtypeStruct((g, e, batch, di, n), jnp.float32),
+        "attn_k": jax.ShapeDtypeStruct(kv, dt),
+        "attn_v": jax.ShapeDtypeStruct(kv, dt),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> Tree:
+    return {
+        "conv": ("layers", None, "cache_batch", None, "inner"),
+        "h": ("layers", None, "cache_batch", "inner", None),
+        "attn_k": ("layers", "cache_batch", "cache_seq", "kv_heads", None),
+        "attn_v": ("layers", "cache_batch", "cache_seq", "kv_heads", None),
+    }

@@ -1,0 +1,711 @@
+"""Model building blocks shared by all assigned architectures.
+
+Pure-function style: every block is ``f(cfg, params, x, ...)`` over nested
+dict params, so the same code paths serve real arrays (smoke tests) and
+ShapeDtypeStructs (dry-run lowering).  Activation sharding is annotated with
+logical axis names via :func:`repro.distributed.sharding.constrain`; note
+that activation *feature* dims stay replicated (the "data" mesh axis is
+already spent on batch), while weights carry FSDP("data") x TP("model").
+
+Memory discipline (these bounds are what make the 32k/500k cells lowerable):
+
+* attention over long sequences is query-chunked (exact, per-chunk softmax)
+  so the scores tensor is (B, H, q_chunk, S) instead of (B, H, S, S);
+* Mamba's (B, S, d_inner, state) expansion never materializes: the chunked
+  scan builds deltaA/deltaBx per chunk inside a rematerialized body;
+* MoE dispatch is grouped: (B, G, g, E, C) with g = moe_group_size.
+
+Numerics: bf16 matmuls, f32 softmax/norm/scan statistics.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+Params = dict
+
+ATTN_DIRECT_MAX_SEQ = 1024  # direct path below this, q-chunked above
+ATTN_Q_CHUNK = 512
+NEG_INF = float(np.finfo(np.float32).min)
+
+# XLA's HLO cost analysis counts a while-loop body ONCE (not x trip count),
+# so the dry-run's FLOP/byte/collective calibration lowers small UNROLLED
+# depths and extrapolates (launch/dryrun.py).  This flag flips every scan in
+# the model code to full unroll.
+_SCAN_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_scan_unroll", default=False)
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    tok = _SCAN_UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _SCAN_UNROLL.reset(tok)
+
+
+def scan(body, init, xs, **kw):
+    """lax.scan that honours the dry-run unroll context."""
+
+    if _SCAN_UNROLL.get():
+        kw = dict(kw, unroll=True)
+    return jax.lax.scan(body, init, xs, **kw)
+
+
+# Query-chunk size for long-sequence attention.  The calibration pass widens
+# it (fewer unrolled bodies, same total FLOPs/bytes) to keep small-depth
+# unrolled compiles tractable.
+_Q_CHUNK: contextvars.ContextVar[int] = contextvars.ContextVar(
+    "repro_attn_q_chunk", default=ATTN_Q_CHUNK)
+
+
+@contextlib.contextmanager
+def attn_q_chunk(n: int):
+    tok = _Q_CHUNK.set(n)
+    try:
+        yield
+    finally:
+        _Q_CHUNK.reset(tok)
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_dtype_of(cfg: ModelConfig):
+    """Storage dtype for parameters (weight-only quantization lever)."""
+
+    return jnp.dtype(cfg.param_dtype) if cfg.param_dtype else jnp.dtype(cfg.dtype)
+
+
+def wcast(cfg: ModelConfig, w: jax.Array) -> jax.Array:
+    """Weight cast applied right before a matmul (perf lever).
+
+    With ``matmul_weight_dtype="float8_e4m3fn"`` the cast is a
+    sharding-preserving elementwise op, so GSPMD's FSDP all-gather moves the
+    fp8 tensor — halving weight-gather collective bytes vs bf16.  The cast
+    result feeds the MXU with f32 accumulation (preferred_element_type on
+    einsum defaults); baseline (None) is a no-op.
+    """
+
+    if cfg.matmul_weight_dtype is None:
+        return w
+    return w.astype(jnp.dtype(cfg.matmul_weight_dtype))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions broadcastable to (..., seq)."""
+
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: jax.Array, k: jax.Array, n_rep: int) -> jax.Array:
+    """(B,Sq,H,hd) x (B,Sk,KV,hd) -> (B,H,Sq,Sk) with KV-head grouping."""
+
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(b, sq, kv, n_rep, hd)
+    s = jnp.einsum("bqgrk,bsgk->bgrqs", qg, k)
+    return s.reshape(b, h, sq, k.shape[1])
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, n_rep: int) -> jax.Array:
+    """(B,H,Sq,Sk) x (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+
+    b, h, sq, sk = probs.shape
+    kv = v.shape[2]
+    pg = probs.reshape(b, kv, n_rep, sq, sk)
+    o = jnp.einsum("bgrqs,bsgk->bqgrk", pg, v)
+    return o.reshape(b, sq, h, v.shape[3])
+
+
+def _softmax_lastdim(s, stats_dtype):
+    """Softmax with selectable statistics dtype (perf lever softmax_dtype).
+
+    bf16 mode keeps the max-subtraction in f32 (stability) but stores the
+    exponentials in bf16 with f32-accumulated sums — roughly halving the
+    attention-score HBM traffic in the XLA path."""
+
+    if stats_dtype == jnp.float32:
+        return jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    m = jnp.max(s.astype(jnp.float32), axis=-1, keepdims=True)
+    e = (s.astype(jnp.float32) - m).astype(stats_dtype)
+    e = jnp.exp(e)
+    denom = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    return (e / denom.astype(stats_dtype))
+
+
+def _attend_direct(q, k, v, n_rep, scale, causal, q_offset=0,
+                   smax=jnp.float32):
+    dt = q.dtype
+    s = _gqa_scores(q * scale, k, n_rep)
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    p = _softmax_lastdim(s, smax).astype(dt)
+    return _gqa_out(p, v, n_rep)
+
+
+def _attend_chunked(q, k, v, n_rep, scale, causal, smax=jnp.float32):
+    """Exact attention with query chunking: scores stay (B,H,qc,S)."""
+
+    b, sq, h, hd = q.shape
+    qc = min(_Q_CHUNK.get(), sq)
+    assert sq % qc == 0, (sq, qc)
+    nq = sq // qc
+    qs = q.reshape(b, nq, qc, h, hd).swapaxes(0, 1)  # (nq,B,qc,H,hd)
+    offsets = jnp.arange(nq) * qc
+
+    def body(_, inp):
+        qi, off = inp
+        o = _attend_direct(qi, k, v, n_rep, scale, causal, q_offset=off,
+                           smax=smax)
+        return None, o
+
+    body = jax.checkpoint(body)
+    _, outs = scan(body, None, (qs, offsets))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (train / prefill / decode / cross)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, w: Params, x: jax.Array):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, wcast(cfg, w["wq"]),
+                   preferred_element_type=dt)
+    k = jnp.einsum("bsd,dhk->bshk", x, wcast(cfg, w["wk"]),
+                   preferred_element_type=dt)
+    v = jnp.einsum("bsd,dhk->bshk", x, wcast(cfg, w["wv"]),
+                   preferred_element_type=dt)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, w["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, w["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attention(
+    cfg: ModelConfig,
+    w: Params,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+    cache_position: jax.Array | int | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """GQA attention.
+
+    Train/prefill (``kv_cache=None``): full self attention over ``x``
+    (query-chunked beyond ATTN_DIRECT_MAX_SEQ); returns (k, v) so prefill
+    can emit a cache.
+
+    Decode (``kv_cache=(k, v)``): single new token against an S_ctx cache
+    whose sequence dim is sharded over "model" (SP; the f32 softmax over the
+    sharded axis lowers to partial reductions + all-reduce under GSPMD —
+    flash-decoding's split-KV scheme).  ``cache_position`` is the scalar
+    write index.
+
+    Cross attention (``cross_kv``): precomputed encoder (k, v); no mask.
+    """
+
+    hd = cfg.head_dim_
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    scale = 1.0 / np.sqrt(hd)
+
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, wcast(cfg, w["wq"]),
+                       preferred_element_type=x.dtype)
+        q = constrain(q, "batch", None, "heads", None)
+        k, v = cross_kv
+        o = _attend_direct(q, k, v, n_rep, scale, causal=False)
+        out = jnp.einsum("bshk,hkd->bsd", o, wcast(cfg, w["wo"]),
+                         preferred_element_type=x.dtype)
+        return constrain(out, "batch", None, None), None
+
+    q, k, v = _project_qkv(cfg, w, x)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        sq = x.shape[1]
+        if cfg.attention_impl == "pallas":
+            # TPU kernel path (interpret mode off-TPU); see kernels/
+            from repro.kernels.flash_attention.ops import flash_attention_bshd
+
+            o = flash_attention_bshd(q, k, v, causal=causal, scale=scale)
+        elif sq <= ATTN_DIRECT_MAX_SEQ or sq % min(_Q_CHUNK.get(), sq):
+            o = _attend_direct(q, k, v, n_rep, scale, causal,
+                               smax=jnp.dtype(cfg.softmax_dtype))
+        else:
+            o = _attend_chunked(q, k, v, n_rep, scale, causal,
+                                smax=jnp.dtype(cfg.softmax_dtype))
+        new_cache = (k, v)
+    else:
+        assert x.shape[1] == 1, "decode path expects one new token"
+        ck, cv = kv_cache  # (B, S_ctx, KV, hd); seq dim sharded "cache_seq"
+        pos = cache_position
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
+        ck = constrain(ck, "batch", "cache_seq", None, None)
+        cv = constrain(cv, "batch", "cache_seq", None, None)
+        s = _gqa_scores(q * scale, ck, n_rep)  # (B,H,1,S_ctx)
+        valid = jnp.arange(ck.shape[1])[None, None, None, :] <= pos
+        s = jnp.where(valid, s, NEG_INF)
+        p = _softmax_lastdim(s, jnp.dtype(cfg.softmax_dtype)).astype(q.dtype)
+        o = _gqa_out(p, cv, n_rep)
+        new_cache = (ck, cv)
+
+    out = jnp.einsum("bshk,hkd->bsd", o, wcast(cfg, w["wo"]),
+                     preferred_element_type=x.dtype)
+    return constrain(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+def mlp(cfg: ModelConfig, w: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, wcast(cfg, w["w1"]),
+                   preferred_element_type=dt)
+    h = constrain(h, "batch", None, "mlp")
+    if cfg.swiglu:
+        g = jnp.einsum("bsd,df->bsf", x, wcast(cfg, w["w3"]),
+                       preferred_element_type=dt)
+        g = constrain(g, "batch", None, "mlp")
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, wcast(cfg, w["w2"]),
+                     preferred_element_type=dt)
+    return constrain(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k, capacity-based grouped dispatch; EP over the "experts" axis)
+# ---------------------------------------------------------------------------
+
+def moe_mlp(cfg: ModelConfig, w: Params, x: jax.Array) -> jax.Array:
+    """Top-k capacity-dropped MoE with routing groups.
+
+    Dispatch memory is bounded to (B, G, g, E, C) with group size
+    ``g = cfg.moe_group_size`` and per-group capacity
+    ``C = ceil(g * k / E * capacity_factor)`` — i.e. ~T * g * k * cf floats
+    regardless of E.  Experts shard over "model" when E divides it
+    (moonshot: 64/16 — true EP); otherwise experts replicate and the expert
+    FFN dim carries the model axis (grok: 8 experts, d_ff/16), automatically
+    via the divisibility rule in ``spec_for``.
+    """
+
+    b, s, d = x.shape
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    g = min(cfg.moe_group_size, s)
+    assert s % g == 0, f"seq {s} not divisible by moe group {g}"
+    ng = s // g
+    cap = max(int(np.ceil(g * k / e * cfg.capacity_factor)), 1)
+
+    xg = x.reshape(b, ng, g, d)
+    logits = jnp.einsum("bngd,de->bnge", xg, wcast(cfg, w["router"]),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (B,NG,g,k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # position of each (token, choice) in its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (B,NG,g,k,E)
+    flat = onehot.reshape(b, ng, g * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=2) - flat).reshape(b, ng, g, k, e)
+    kept = (pos_in_expert < cap) * onehot  # drop beyond capacity
+    cap_slot = jax.nn.one_hot(
+        jnp.sum(pos_in_expert * onehot, axis=-1).astype(jnp.int32), cap,
+        dtype=jnp.float32,
+    )  # (B,NG,g,k,C)
+
+    ddt = jnp.dtype(cfg.moe_dispatch_dtype)
+    dispatch = jnp.einsum("bngke,bngkc->bngec", kept, cap_slot,
+                          preferred_element_type=ddt).astype(ddt)
+    combine = jnp.einsum("bngke,bngkc,bngk->bngec", kept, cap_slot,
+                         gate_vals, preferred_element_type=ddt).astype(ddt)
+    dispatch = constrain(dispatch, "batch", None, None, "experts", None)
+
+    dt = x.dtype
+    ein = jnp.einsum("bngd,bngec->bnecd", xg, dispatch.astype(dt))
+    ein = constrain(ein, "batch", None, "experts", None, None)
+    h = jnp.einsum("bnecd,edf->bnecf", ein, wcast(cfg, w["w1"]),
+                   preferred_element_type=dt)
+    h = constrain(h, "batch", None, "experts", None, "mlp")
+    if cfg.swiglu:
+        gp = jnp.einsum("bnecd,edf->bnecf", ein, wcast(cfg, w["w3"]),
+                        preferred_element_type=dt)
+        gp = constrain(gp, "batch", None, "experts", None, "mlp")
+        h = jax.nn.silu(h) * gp
+    else:
+        h = jax.nn.gelu(h)
+    eout = jnp.einsum("bnecf,efd->bnecd", h, wcast(cfg, w["w2"]),
+                      preferred_element_type=dt)
+    eout = constrain(eout, "batch", None, "experts", None, None)
+    out = jnp.einsum("bnecd,bngec->bngd", eout, combine.astype(dt))
+    return constrain(out.reshape(b, s, d), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# selective-scan machinery (shared by Mamba-1/2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SSMState:
+    """Recurrent state for decode: conv window + SSM hidden state."""
+
+    conv: jax.Array  # (B, d_conv-1, conv_channels)
+    h: jax.Array  # (B, d_inner, state) f32
+
+
+def _causal_conv1d(x: jax.Array, kernel: jax.Array, bias: jax.Array,
+                   prepend: jax.Array | None):
+    """Depthwise causal conv over seq.  x: (B,S,C); kernel: (K,C)."""
+
+    k = kernel.shape[0]
+    if prepend is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = prepend.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(
+        xp[:, i: i + x.shape[1], :] * kernel[i][None, None, :] for i in range(k)
+    )
+    out = jax.nn.silu(out + bias[None, None, :])
+    tail = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype
+    )
+    return out, tail
+
+
+def _ssm_scan(delta, B_ssm, C_ssm, xi, h0, chunk, *, A_full=None, A_head=None,
+              headdim=1):
+    """Chunked selective scan; the (B, chunk, DI, N) expansion happens inside
+    the rematerialized chunk body, never for the whole sequence.
+
+    delta: (B,S,DI) f32  (mamba-1)  or (B,S,H) f32 (mamba-2, per-head)
+    B_ssm/C_ssm: (B,S,N) f32;  xi: (B,S,DI);  h0: (B,DI,N) f32.
+    A_full: (DI,N) f32 (mamba-1) or A_head: (H,) f32 (mamba-2).
+    Returns y: (B,S,DI) (xi dtype), h_last: (B,DI,N) f32.
+    """
+
+    b, s, di = xi.shape
+    n = B_ssm.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        # zero padding is exact: delta=0 -> a=exp(0)=1, bx=0 (identity
+        # updates that leave h_last untouched); padded y rows are sliced off
+        padfn = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        delta, B_ssm, C_ssm, xi = map(padfn, (delta, B_ssm, C_ssm, xi))
+        s += pad
+    nc = s // chunk
+
+    def split(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (split(delta), split(B_ssm), split(C_ssm), split(xi))
+
+    def chunk_step(h, inp):
+        d, bm, cm, xc = inp  # (B,chunk,DI|H), (B,chunk,N) x2, (B,chunk,DI)
+        if A_full is not None:
+            a = jnp.exp(d[..., None] * A_full[None, None])  # (B,chunk,DI,N)
+            d_di = d
+        else:
+            dah = jnp.exp(d * A_head[None, None, :])  # (B,chunk,H)
+            a = jnp.broadcast_to(
+                jnp.repeat(dah, headdim, axis=-1)[..., None], (b, chunk, di, n)
+            )
+            d_di = jnp.repeat(d, headdim, axis=-1)
+        bx = d_di[..., None] * bm[:, :, None, :] * xc.astype(jnp.float32)[..., None]
+
+        def combine(left, right):
+            al, bl = left
+            ar, br = right
+            return al * ar, bl * ar + br
+
+        a_acc, bx_acc = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        hs = a_acc * h[:, None] + bx_acc  # (B,chunk,DI,N)
+        y = jnp.einsum("bldn,bln->bld", hs, cm)
+        return hs[:, -1], y.astype(xi.dtype)
+
+    chunk_step = jax.checkpoint(chunk_step)
+    h_last, ys = scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    if pad:
+        y = y[:, : s - pad]
+    return y, h_last
+
+
+def _ssm_scan_fused_m1(cfg: ModelConfig, w: Params, xi: jax.Array,
+                       h0: jax.Array, chunk: int):
+    """Mamba-1 scan with x_proj/dt_proj fused INTO the chunk body (perf
+    lever ``mamba_fused_proj``): the full-sequence f32 ``delta`` (B,S,DI)
+    and the (B,S,dr+2n) projection never materialize — only per-chunk
+    transients inside the rematerialized body.  Exactness under padding is
+    kept by masking delta beyond the true length (a=exp(0)=1, bx=0)."""
+
+    b, s, di = xi.shape
+    n, dr = cfg.ssm_state, cfg.dt_rank_
+    s_orig = s
+    pad = (-s) % chunk
+    if pad:
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // chunk
+    xs_x = xi.reshape(b, nc, chunk, di).swapaxes(0, 1)
+    offs = jnp.arange(nc) * chunk
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))  # (DI, N)
+
+    def chunk_step(h, inp):
+        xc, off = inp  # (B, chunk, DI), scalar
+        proj = jnp.einsum("bli,ie->ble", xc, w["x_proj"])
+        delta_r, B_c, C_c = jnp.split(proj, [dr, dr + n], axis=-1)
+        delta = jax.nn.softplus(
+            jnp.einsum("blr,ri->bli", delta_r, w["dt_proj"]).astype(jnp.float32)
+            + w["dt_bias"].astype(jnp.float32))
+        valid = (off + jnp.arange(chunk) < s_orig)[None, :, None]
+        delta = jnp.where(valid, delta, 0.0)
+        a = jnp.exp(delta[..., None] * A[None, None])
+        bx = (delta[..., None] * B_c.astype(jnp.float32)[:, :, None, :]
+              * xc.astype(jnp.float32)[..., None])
+
+        def combine(left, right):
+            al, bl = left
+            ar, br = right
+            return al * ar, bl * ar + br
+
+        a_acc, bx_acc = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        hs = a_acc * h[:, None] + bx_acc
+        y = jnp.einsum("bldn,bln->bld", hs, C_c.astype(jnp.float32))
+        return hs[:, -1], y.astype(xc.dtype)
+
+    chunk_step = jax.checkpoint(chunk_step)
+    h_last, ys = scan(chunk_step, h0, (xs_x, offs))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    if pad:
+        y = y[:, :s_orig]
+    return y, h_last
+
+
+def _ssm_step(delta, B_ssm, C_ssm, xi, h0, *, A_full=None, A_head=None,
+              headdim=1):
+    """Single decode step of the scan (S == 1 specialization)."""
+
+    if A_full is not None:
+        a = jnp.exp(delta[:, 0, :, None] * A_full[None])  # (B,DI,N)
+        d_di = delta[:, 0]
+    else:
+        dah = jnp.exp(delta[:, 0] * A_head[None, :])  # (B,H)
+        a = jnp.repeat(dah, headdim, axis=-1)[..., None]
+        d_di = jnp.repeat(delta[:, 0], headdim, axis=-1)
+    bx = d_di[..., None] * B_ssm[:, 0, None, :] * xi.astype(jnp.float32)[:, 0, :, None]
+    h1 = a * h0 + bx
+    y = jnp.einsum("bdn,bn->bd", h1, C_ssm[:, 0])[:, None].astype(xi.dtype)
+    return y, h1
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (falcon-mamba family)
+# ---------------------------------------------------------------------------
+
+def mamba1_block(
+    cfg: ModelConfig,
+    w: Params,
+    x: jax.Array,
+    state: SSMState | None = None,
+) -> tuple[jax.Array, SSMState]:
+    """Mamba-1 (S6) block.  x: (B,S,D).  With ``state`` and S==1 it runs one
+    decode step, updating the conv window + hidden state."""
+
+    b, s, d = x.shape
+    di, n, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    dt = x.dtype
+
+    xz = jnp.einsum("bsd,de->bse", x, w["in_proj"])  # (B,S,2*DI)
+    xz = constrain(xz, "batch", None, "inner")
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    prepend = state.conv if state is not None else None
+    xi, conv_tail = _causal_conv1d(xi, w["conv_w"], w["conv_b"], prepend)
+    xi = constrain(xi, "batch", None, "inner")
+
+    h0 = (
+        state.h.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, di, n), jnp.float32)
+    )
+    if cfg.mamba_fused_proj and s > 1:
+        y, h_last = _ssm_scan_fused_m1(cfg, w, xi, h0, min(cfg.scan_chunk, s))
+    else:
+        proj = jnp.einsum("bsi,ie->bse", xi, w["x_proj"])  # (B,S,dr+2n)
+        delta_r, B_ssm, C_ssm = jnp.split(proj, [dr, dr + n], axis=-1)
+        delta = jax.nn.softplus(
+            jnp.einsum("bsr,ri->bsi", delta_r, w["dt_proj"]).astype(jnp.float32)
+            + w["dt_bias"].astype(jnp.float32)
+        )  # (B,S,DI) f32
+        delta = constrain(delta, "batch", None, "inner")
+
+        A = -jnp.exp(w["A_log"].astype(jnp.float32))  # (DI,N)
+        B32, C32 = B_ssm.astype(jnp.float32), C_ssm.astype(jnp.float32)
+        if s == 1:
+            y, h_last = _ssm_step(delta, B32, C32, xi, h0, A_full=A)
+        elif cfg.ssm_impl == "pallas":
+            # VMEM-resident scan kernel (kernels/ssm_scan); h0 must be zero
+            # here (prefill/train start) — decode goes through _ssm_step
+            from repro.kernels.ssm_scan.ops import ssm_scan_op
+
+            y, h_last = ssm_scan_op(
+                delta, B32, C32, xi, A,
+                block_d=min(512, di), chunk=min(cfg.scan_chunk, s))
+        else:
+            y, h_last = _ssm_scan(delta, B32, C32, xi, h0,
+                                  min(cfg.scan_chunk, s), A_full=A)
+    y = y + xi * w["D"][None, None, :].astype(dt)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, w["out_proj"])
+    out = constrain(out, "batch", None, None)
+    return out, SSMState(conv=conv_tail, h=h_last)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (zamba2 family) — SSD with per-head scalar decay
+# ---------------------------------------------------------------------------
+
+def mamba2_block(
+    cfg: ModelConfig,
+    w: Params,
+    x: jax.Array,
+    state: SSMState | None = None,
+) -> tuple[jax.Array, SSMState]:
+    """Mamba-2 (SSD) block: heads of ``mamba_headdim`` channels share B/C;
+    A is a scalar per head.  Heads are contiguous channel blocks of the
+    (B, S, d_inner) activation."""
+
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh, p = cfg.mamba_heads, cfg.mamba_headdim
+    dt = x.dtype
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, w["in_proj"])
+    z, xBC, delta_in = jnp.split(zxbcdt, [di, di + di + 2 * n], axis=-1)
+    z = constrain(z, "batch", None, "inner")
+
+    prepend = state.conv if state is not None else None
+    xBC, conv_tail = _causal_conv1d(xBC, w["conv_w"], w["conv_b"], prepend)
+    xi, B_ssm, C_ssm = jnp.split(xBC, [di, di + n], axis=-1)
+    xi = constrain(xi, "batch", None, "inner")
+
+    delta = jax.nn.softplus(
+        delta_in.astype(jnp.float32) + w["dt_bias"][None, None, :]
+    )  # (B,S,H) f32
+    A = -jnp.exp(w["A_log"].astype(jnp.float32))  # (H,)
+    h0 = (
+        state.h.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, di, n), jnp.float32)
+    )
+    B32, C32 = B_ssm.astype(jnp.float32), C_ssm.astype(jnp.float32)
+    if s == 1:
+        y, h_last = _ssm_step(delta, B32, C32, xi, h0, A_head=A, headdim=p)
+    else:
+        y, h_last = _ssm_scan(delta, B32, C32, xi, h0,
+                              min(cfg.scan_chunk, s), A_head=A, headdim=p)
+    y = y + xi * jnp.repeat(w["D"], p)[None, None, :].astype(dt)
+    y = rms_norm(y * jax.nn.silu(z), w["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, w["out_proj"])
+    out = constrain(out, "batch", None, None)
+    return out, SSMState(conv=conv_tail, h=h_last)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    if cfg.embed_onehot:
+        # one-hot matmul keeps the vocab-sharded table in place (each shard
+        # contracts its vocab slice + all-reduce) instead of GSPMD's
+        # replicate-then-gather fallback
+        oh = jax.nn.one_hot(tokens, emb.shape[0], dtype=emb.dtype)
+        x = jnp.einsum("bsv,vd->bsd", oh, emb).astype(dtype_of(cfg))
+    else:
+        x = jnp.take(emb, tokens, axis=0).astype(dtype_of(cfg))
+    return constrain(x, "batch", None, None)
+
+
+def lm_logits(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    head = params["lm_head"] if not cfg.tie_embeddings else params["tok_emb"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, wcast(cfg, head),
+                        preferred_element_type=x.dtype)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def cross_entropy(cfg: ModelConfig, logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean NLL over all positions; labels < 0 are masked (padding)."""
+
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)

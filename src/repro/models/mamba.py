@@ -1,0 +1,172 @@
+"""Attention-free SSM LM (falcon-mamba-7b family, Mamba-1 blocks).
+
+Decode state is O(1) in context length — conv window (K-1 inputs) + SSM
+hidden (d_inner x state) per layer — which is why this family runs the
+``long_500k`` cell: serve_step cost is independent of the 524288-token
+context.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.layers import SSMState
+
+Tree = dict
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    V, D = cfg.padded_vocab, cfg.d_model
+    di, n, dr, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_, cfg.d_conv
+    nl = cfg.n_layers
+    layers = {
+        "norm": ((nl, D), ("layers", None)),
+        "in_proj": ((nl, D, 2 * di), ("layers", "embed", "inner")),
+        "conv_w": ((nl, K, di), ("layers", None, "inner")),
+        "conv_b": ((nl, di), ("layers", "inner")),
+        "x_proj": ((nl, di, dr + 2 * n), ("layers", "inner", None)),
+        "dt_proj": ((nl, dr, di), ("layers", None, "inner")),
+        "dt_bias": ((nl, di), ("layers", "inner")),
+        "A_log": ((nl, di, n), ("layers", "inner", None)),
+        "D": ((nl, di), ("layers", "inner")),
+        "out_proj": ((nl, di, D), ("layers", "inner", "embed")),
+    }
+    return {
+        "tok_emb": ((V, D), ("vocab", "embed")),
+        "final_norm": ((D,), (None,)),
+        "lm_head": ((D, V), ("embed", "vocab")),
+        "layers": layers,
+    }
+
+
+def _map_specs(specs: Tree, fn) -> Tree:
+    return {
+        k: (_map_specs(v, fn) if isinstance(v, dict) else fn(*v))
+        for k, v in specs.items()
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    dt = L.dtype_of(cfg)
+
+    def mk(sh, ax):
+        # scan-dynamics params stay f32 for numerical stability
+        if ax and "inner" in ax and len(sh) >= 2 and sh[-1] == cfg.ssm_state:
+            return jax.ShapeDtypeStruct(sh, jnp.float32)
+        return jax.ShapeDtypeStruct(sh, dt)
+
+    return _map_specs(param_specs(cfg), mk)
+
+
+def param_axes(cfg: ModelConfig) -> Tree:
+    return _map_specs(param_specs(cfg), lambda sh, ax: ax)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    dt = L.dtype_of(cfg)
+    counter = [0]
+
+    def walk(t):
+        out = {}
+        for k, v in t.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+                continue
+            sh, _ax = v
+            counter[0] += 1
+            kk = jax.random.fold_in(key, counter[0])
+            if "norm" in k or k == "D":
+                out[k] = jnp.ones(sh, dt)
+            elif k == "A_log":
+                # S4D-real init: A = -(1..n) per channel
+                a = jnp.broadcast_to(jnp.arange(1, sh[-1] + 1, dtype=jnp.float32), sh)
+                out[k] = jnp.log(a)
+            elif k == "dt_bias":
+                out[k] = jnp.full(sh, -4.6, dt)  # softplus^-1(0.01)
+            elif k.endswith("_b"):
+                out[k] = jnp.zeros(sh, dt)
+            else:
+                out[k] = (jax.random.normal(kk, sh, jnp.float32) * 0.02).astype(dt)
+        return out
+
+    return walk(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Tree, tokens: jax.Array,
+            states: Tree | None = None, collect_state: bool = False):
+    """states: stacked decode state {"conv": (L,B,K-1,DI), "h": (L,B,DI,N)}."""
+
+    x = L.embed_tokens(cfg, params["tok_emb"], tokens)
+
+    def body(carry, inp):
+        if states is None:
+            w = inp
+            st = None
+        else:
+            w, conv, h = inp
+            st = SSMState(conv=conv, h=h)
+        y, new_state = L.mamba1_block(cfg, w, L.rms_norm(carry, w["norm"], cfg.norm_eps), st)
+        out = carry + y
+        ys = (new_state.conv, new_state.h) if (collect_state or states is not None) else None
+        return out, ys
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    xs = params["layers"] if states is None else (
+        params["layers"], states["conv"], states["h"]
+    )
+    x, ys = L.scan(body, x, xs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if ys is not None:
+        conv, h = ys
+        return x, {"conv": conv, "h": h}
+    return x, None
+
+
+def loss_fn(cfg: ModelConfig, params: Tree, batch: dict) -> jax.Array:
+    hidden, _ = forward(cfg, params, batch["tokens"])
+    logits = L.lm_logits(cfg, params, hidden)
+    return L.cross_entropy(cfg, logits, batch["labels"])
+
+
+def prefill(cfg: ModelConfig, params: Tree, batch: dict):
+    hidden, state = forward(cfg, params, batch["tokens"], collect_state=True)
+    logits = L.lm_logits(cfg, params, hidden[:, -1:, :])
+    return logits, state
+
+
+def decode_step(cfg: ModelConfig, params: Tree, state: Tree,
+                tokens: jax.Array, pos: jax.Array):
+    """SSM serve step ignores ``pos`` (state is position-free)."""
+
+    del pos
+    hidden, new_state = forward(cfg, params, tokens, states=state)
+    logits = L.lm_logits(cfg, params, hidden)
+    return logits, new_state
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> Tree:
+    """Decode state; ``seq`` is irrelevant (O(1) state) but kept for API."""
+
+    del seq
+    dt = L.dtype_of(cfg)
+    nl, di, n, K = cfg.n_layers, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    return {
+        "conv": jax.ShapeDtypeStruct((nl, batch, K - 1, di), dt),
+        "h": jax.ShapeDtypeStruct((nl, batch, di, n), jnp.float32),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> Tree:
+    return {
+        "conv": ("layers", "cache_batch", None, "inner"),
+        "h": ("layers", "cache_batch", "inner", None),
+    }

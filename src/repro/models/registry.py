@@ -1,0 +1,103 @@
+"""Uniform model API over the architecture families (``--arch`` dispatch)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, mamba, transformer
+from repro.models import layers as L
+
+Tree = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init_params: Callable
+    abstract_params: Callable
+    param_axes: Callable
+    loss_fn: Callable  # (params, batch) -> scalar
+    prefill: Callable  # (params, batch) -> (logits, cache)
+    decode_step: Callable  # (params, cache, tokens, pos) -> (logits, cache)
+    abstract_cache: Callable  # (batch, seq) -> cache tree
+    cache_axes: Callable  # () -> cache logical-axes tree
+
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "encdec": encdec,
+    "ssm": mamba,
+    "hybrid": hybrid,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    mod = _FAMILY_MODULES[cfg.family]
+    return ModelApi(
+        cfg=cfg,
+        init_params=lambda key: mod.init_params(cfg, key),
+        abstract_params=lambda: mod.abstract_params(cfg),
+        param_axes=lambda: mod.param_axes(cfg),
+        loss_fn=lambda params, batch: mod.loss_fn(cfg, params, batch),
+        prefill=lambda params, batch: mod.prefill(cfg, params, batch),
+        decode_step=lambda params, cache, tokens, pos: mod.decode_step(
+            cfg, params, cache, tokens, pos),
+        abstract_cache=lambda batch, seq: mod.abstract_cache(cfg, batch, seq),
+        cache_axes=lambda: mod.cache_axes(cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per shape cell (the dry-run's input_specs)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, kind: str, batch: int, seq: int) -> Tree:
+    """ShapeDtypeStruct stand-ins for every model input of a step kind.
+
+    ``train``   -> batch for loss/train_step
+    ``prefill`` -> prompt batch
+    ``decode``  -> (cache, tokens, pos) handled by the launcher; this
+                   returns just the token batch (cache comes from
+                   ``abstract_cache``).
+    Modality frontends are stubs: vlm adds ``patch_embeds``; encdec adds
+    ``frames`` (both precomputed embeddings per the assignment).
+    """
+
+    toks = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if kind in ("train",):
+        batch_tree: Tree = {
+            "tokens": toks,
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    elif kind == "prefill":
+        batch_tree = {"tokens": toks}
+    elif kind == "decode":
+        batch_tree = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    else:
+        raise ValueError(kind)
+
+    if cfg.family == "vlm" and kind != "decode":
+        batch_tree["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), L.dtype_of(cfg))
+    if cfg.family == "encdec" and kind != "decode":
+        batch_tree["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frames, cfg.d_model), L.dtype_of(cfg))
+    return batch_tree
+
+
+def input_axes(cfg: ModelConfig, kind: str) -> Tree:
+    axes: Tree = {"tokens": ("batch", None)}
+    if kind == "train":
+        axes["labels"] = ("batch", None)
+    if cfg.family == "vlm" and kind != "decode":
+        axes["patch_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec" and kind != "decode":
+        axes["frames"] = ("batch", "frames", None)
+    return axes

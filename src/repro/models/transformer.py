@@ -1,0 +1,241 @@
+"""Decoder-only LM trunk: dense, MoE, and VLM (prefix patch embeds) families.
+
+Layers are stacked on a leading L axis and executed with ``jax.lax.scan``
+(compile time independent of depth; per-block remat via ``jax.checkpoint``
+when ``cfg.remat == "block"``).  Params are nested dicts; every leaf has a
+logical-axes tuple from :func:`param_axes` that the launcher maps to the
+mesh (FSDP over "data" x TP over "model"; see distributed/sharding.py).
+
+Entry points (used by smoke tests, dry-run, train/serve launchers):
+
+* ``loss_fn(cfg, params, batch)``                — train loss
+* ``prefill(cfg, params, batch)``                — logits + KV cache
+* ``decode_step(cfg, params, cache, tokens, pos)`` — 1-token serve step
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+Tree = dict
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _layer_specs(cfg: ModelConfig) -> dict[str, tuple[tuple[int, ...], tuple]]:
+    D, F = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    nl = cfg.n_layers
+    s: dict[str, tuple[tuple[int, ...], tuple]] = {
+        "attn_norm": ((nl, D), ("layers", None)),
+        "mlp_norm": ((nl, D), ("layers", None)),
+        "wq": ((nl, D, H, hd), ("layers", "embed", "heads", None)),
+        "wk": ((nl, D, KV, hd), ("layers", "embed", "kv_heads", None)),
+        "wv": ((nl, D, KV, hd), ("layers", "embed", "kv_heads", None)),
+        "wo": ((nl, H, hd, D), ("layers", "heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ((nl, hd), ("layers", None))
+        s["k_norm"] = ((nl, hd), ("layers", None))
+    if cfg.family == "moe":
+        E = cfg.n_experts
+        s["router"] = ((nl, D, E), ("layers", "embed", None))
+        s["w1"] = ((nl, E, D, F), ("layers", "experts", "embed", "mlp"))
+        s["w2"] = ((nl, E, F, D), ("layers", "experts", "mlp", "embed"))
+        if cfg.swiglu:
+            s["w3"] = ((nl, E, D, F), ("layers", "experts", "embed", "mlp"))
+    else:
+        s["w1"] = ((nl, D, F), ("layers", "embed", "mlp"))
+        s["w2"] = ((nl, F, D), ("layers", "mlp", "embed"))
+        if cfg.swiglu:
+            s["w3"] = ((nl, D, F), ("layers", "embed", "mlp"))
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    V, D = cfg.padded_vocab, cfg.d_model
+    top: Tree = {
+        "tok_emb": ((V, D), ("vocab", "embed")),
+        "final_norm": ((D,), (None,)),
+        "layers": _layer_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        top["lm_head"] = ((D, V), ("embed", "vocab"))
+    return top
+
+
+def _map_specs(specs: Tree, fn) -> Tree:
+    out = {}
+    for k, v in specs.items():
+        out[k] = _map_specs(v, fn) if isinstance(v, dict) else fn(*v)
+    return out
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    dt = L.param_dtype_of(cfg)
+    return _map_specs(param_specs(cfg), lambda shape, ax: jax.ShapeDtypeStruct(shape, dt))
+
+
+def param_axes(cfg: ModelConfig) -> Tree:
+    return _map_specs(param_specs(cfg), lambda shape, ax: ax)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Tree:
+    dt = L.param_dtype_of(cfg)
+    specs = param_specs(cfg)
+    flat: list[tuple[tuple[str, ...], tuple]] = []
+
+    def walk(t, path):
+        for k, v in t.items():
+            if isinstance(v, dict):
+                walk(v, path + (k,))
+            else:
+                flat.append((path + (k,), v))
+
+    walk(specs, ())
+    keys = jax.random.split(key, len(flat))
+    out: Tree = {}
+    for (path, (shape, _ax)), kk in zip(flat, keys):
+        leaf_name = path[-1]
+        if "norm" in leaf_name:
+            val = jnp.ones(shape, dt)
+        else:
+            scale = 0.02 if "emb" in leaf_name or "router" in leaf_name else (
+                0.02 / np.sqrt(2 * cfg.n_layers)
+            )
+            val = (jax.random.normal(kk, shape, jnp.float32) * scale).astype(dt)
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[leaf_name] = val
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block(cfg: ModelConfig, w: Tree, x: jax.Array, positions: jax.Array,
+           kv_cache=None, cache_position=None):
+    h, new_cache = L.attention(
+        cfg, w, L.rms_norm(x, w["attn_norm"], cfg.norm_eps),
+        positions=positions, kv_cache=kv_cache, cache_position=cache_position,
+    )
+    x = x + h
+    xn = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + L.moe_mlp(cfg, w, xn)
+    else:
+        x = x + L.mlp(cfg, w, xn)
+    return x, new_cache
+
+
+def _embed_inputs(cfg: ModelConfig, params: Tree, tokens: jax.Array,
+                  patch_embeds: jax.Array | None) -> jax.Array:
+    x = L.embed_tokens(cfg, params["tok_emb"], tokens)
+    if cfg.family == "vlm":
+        assert patch_embeds is not None, "vlm family needs patch_embeds"
+        p = patch_embeds.shape[1]
+        x = jnp.concatenate(
+            [patch_embeds.astype(x.dtype), x[:, p:, :]], axis=1
+        )  # patches occupy the first P positions (stubbed ViT frontend)
+        x = constrain(x, "batch", None, None)
+    return x
+
+
+def forward(cfg: ModelConfig, params: Tree, tokens: jax.Array,
+            patch_embeds: jax.Array | None = None,
+            collect_cache: bool = False):
+    """Full-sequence forward.  Returns (hidden, stacked_kv or None)."""
+
+    x = _embed_inputs(cfg, params, tokens, patch_embeds)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, lw):
+        y, cache = _block(cfg, lw, carry, positions)
+        return y, (cache if collect_cache else None)
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, caches = L.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def loss_fn(cfg: ModelConfig, params: Tree, batch: dict) -> jax.Array:
+    hidden, _ = forward(cfg, params, batch["tokens"],
+                        batch.get("patch_embeds"))
+    logits = L.lm_logits(cfg, params, hidden)
+    return L.cross_entropy(cfg, logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: Tree, batch: dict):
+    """Run the full prompt; returns last-position logits + stacked KV cache
+    {"k": (L,B,S,KV,hd), "v": ...} with the cache seq dim SP-sharded."""
+
+    hidden, caches = forward(cfg, params, batch["tokens"],
+                             batch.get("patch_embeds"), collect_cache=True)
+    k, v = caches
+    cache = {
+        "k": constrain(k, None, "batch", "cache_seq", None, None),
+        "v": constrain(v, None, "batch", "cache_seq", None, None),
+    }
+    logits = L.lm_logits(cfg, params, hidden[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Tree, cache: dict,
+                tokens: jax.Array, pos: jax.Array):
+    """One serve step: ``tokens`` is (B, 1); ``pos`` is the scalar write
+    index into the (B, S_ctx) cache.  Returns (logits, updated cache)."""
+
+    x = L.embed_tokens(cfg, params["tok_emb"], tokens)
+    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+
+    def body(carry, inp):
+        lw, ck, cv = inp
+        y, new_cache = _block(cfg, lw, carry, positions,
+                              kv_cache=(ck, cv), cache_position=pos)
+        return y, new_cache
+
+    x, (k, v) = L.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(cfg, params, x)
+    new_cache = {
+        "k": constrain(k, None, "batch", "cache_seq", None, None),
+        "v": constrain(v, None, "batch", "cache_seq", None, None),
+    }
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs / caches (dry-run)
+# ---------------------------------------------------------------------------
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> Tree:
+    dt = L.dtype_of(cfg)
+    shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dt),
+        "v": jax.ShapeDtypeStruct(shape, dt),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> Tree:
+    ax = ("layers", "cache_batch", "cache_seq", "kv_heads", None)
+    return {"k": ax, "v": ax}

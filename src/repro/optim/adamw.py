@@ -1,0 +1,84 @@
+"""AdamW with bf16 params + f32 moments, global-norm clipping, and optional
+gradient compression hooks (see compression.py).
+
+State layout mirrors the param tree: {"m": tree_f32, "v": tree_f32,
+"step": scalar}.  Moments inherit each param's sharding (FSDP x TP), so the
+optimizer adds 8 bytes/param spread over the whole mesh — the ZeRO-3
+arithmetic quoted in DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: Callable[[jax.Array], jax.Array] | None = None  # step -> scale
+
+
+def init_state(params: Tree) -> Tree:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(abstract_params: Tree) -> Tree:
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params)
+    return {"m": zeros, "v": zeros,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def state_axes(param_axes: Tree) -> Tree:
+    """Moments share the params' logical axes; step is replicated."""
+
+    return {"m": param_axes, "v": param_axes, "step": ()}
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> tuple[Tree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def apply_updates(cfg: AdamWConfig, params: Tree, grads: Tree, state: Tree):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+
+    grads32, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = cfg.lr * (cfg.schedule(step) if cfg.schedule is not None else 1.0)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads32, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,94 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization).
+
+At multi-pod scale the inter-pod (DCN) gradient all-reduce dominates; we
+compress with int8 + per-row scales + error feedback (1-bit-Adam style error
+accumulation keeps convergence).  The compressor is a pure function pair so
+it can wrap any collective:
+
+    compressed, scales = encode(grad + error)
+    error = (grad + error) - decode(compressed, scales)
+    all_reduce(compressed-as-f32-mean)   # inside jit, via psum/mean
+
+Inside a jit'd SPMD program we cannot literally transmit int8 across a named
+axis with psum (XLA would upcast), so the framework applies this at the
+*grad-sync boundary*: quantize -> dequantize -> psum.  The quantization
+noise then models the real bandwidth saving faithfully while keeping the
+program SPMD; on real DCN deployments the same encode/decode pair wraps a
+jax.experimental.multihost_utils transfer.  EXPERIMENTS.md quantifies the
+convergence effect; tests check encode/decode round-trip error bounds and
+error-feedback convergence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    bits: int = 8  # int8 rows
+    error_feedback: bool = True
+
+
+def _rowwise(x: jax.Array) -> jax.Array:
+    """View as (rows, cols) for per-row scaling."""
+
+    if x.ndim <= 1:
+        return x.reshape(1, -1)
+    return x.reshape(x.shape[0], -1)
+
+
+def encode(x: jax.Array, bits: int = 8) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int quantization.  Returns (q, scales)."""
+
+    assert bits in (4, 8)
+    qmax = (1 << (bits - 1)) - 1
+    rows = _rowwise(x.astype(jnp.float32))
+    scales = jnp.max(jnp.abs(rows), axis=1, keepdims=True) / qmax
+    scales = jnp.maximum(scales, 1e-12)
+    q = jnp.clip(jnp.round(rows / scales), -qmax, qmax).astype(jnp.int8)
+    return q.reshape(x.shape), scales.squeeze(1)
+
+
+def decode(q: jax.Array, scales: jax.Array) -> jax.Array:
+    rows = _rowwise(q.astype(jnp.float32))
+    return (rows * scales[:, None]).reshape(q.shape)
+
+
+def compress_tree(grads: Tree, error: Tree | None, cfg: CompressionConfig):
+    """Quantize-dequantize each leaf with error feedback.
+
+    Returns (grads_for_allreduce, new_error).  With cfg.enabled=False this
+    is the identity (and error stays zero), so the train step has a single
+    code path.
+    """
+
+    if not cfg.enabled:
+        return grads, error
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32)
+        if cfg.error_feedback and e is not None:
+            g32 = g32 + e
+        q, s = encode(g32, cfg.bits)
+        deq = decode(q, s)
+        new_e = (g32 - deq) if cfg.error_feedback else jnp.zeros_like(g32)
+        return deq, new_e
+
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def init_error(params: Tree) -> Tree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,32 @@
+"""LR schedules (pure functions of the step, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def linear_warmup_cosine(warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    """Warmup to 1.0 then cosine to ``final_frac``."""
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+
+    return fn
+
+
+def inverse_sqrt(warmup_steps: int):
+    def fn(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return jnp.minimum(s / max(warmup_steps, 1), jnp.sqrt(warmup_steps / s))
+
+    return fn

@@ -1,0 +1,122 @@
+"""Tests for the adaptive threshold (paper Eq. 2/3, Section 2.3.2)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import AdaptiveThreshold, StaticWatermarkThreshold
+
+PAPER_PCTS = [0.3937, 0.5433, 0.5905, 0.6299, 0.6062,
+              0.5826, 0.622, 0.622, 0.622, 0.6771]
+PAPER_THRESHOLDS = [0.5, 0.5433, 0.5433, 0.5433, 0.5905,
+                    0.5826, 0.5826, 0.5905, 0.5905, 0.6062]
+
+
+class TestPaperCaseStudy:
+    def test_reproduces_paper_sequence(self):
+        """Section 2.3.2 case study: our indexing convention reproduces 9/10
+        of the paper's printed thresholds exactly (the 7th differs by one
+        sorted index — consistent with their 4-decimal rounding)."""
+
+        at = AdaptiveThreshold()
+        out = at.observe_many(PAPER_PCTS)
+        exact = sum(abs(a - b) < 1e-9 for a, b in zip(out, PAPER_THRESHOLDS))
+        assert exact >= 9
+        # ... and the one mismatch is a neighbour element of PercentList
+        for a, b in zip(out, PAPER_THRESHOLDS):
+            assert abs(a - b) <= 0.012
+
+    def test_redirection_set_matches_paper(self):
+        """The paper lists the streams directed to SSD: those with pct
+        0.6299, 0.6062, 0.5826(x0)... — verify the >threshold predicate picks
+        the same high-percentage members."""
+
+        at = AdaptiveThreshold()
+        sent = []
+        for p in PAPER_PCTS:
+            thr_before = at.threshold
+            at.observe(p)
+            if p > thr_before:
+                sent.append(p)
+        # all of the paper's listed redirected percentages appear
+        for expected in (0.6299, 0.6062, 0.622, 0.6771):
+            assert expected in sent
+
+
+class TestAdaptiveBehaviour:
+    def test_default_before_history(self):
+        at = AdaptiveThreshold(default=0.5)
+        assert at.threshold == 0.5
+
+    def test_low_randomness_strict_threshold(self):
+        """Mostly-sequential history => threshold near the top of the list
+        (few streams redirected)."""
+
+        at = AdaptiveThreshold()
+        at.observe_many([0.05, 0.08, 0.1, 0.12, 0.06, 0.9])
+        assert at.threshold >= 0.5  # picks high-index element
+
+    def test_high_randomness_loose_threshold(self):
+        at = AdaptiveThreshold()
+        at.observe_many([0.9, 0.95, 0.85, 0.92, 0.88])
+        # avgper ~0.9 -> index ~0.1*N -> near the list's bottom
+        assert at.threshold <= 0.9
+
+    def test_threshold_always_member_of_percentlist(self):
+        at = AdaptiveThreshold(window=8)
+        import random
+        rnd = random.Random(0)
+        at.observe(rnd.random())  # first observation keeps the default
+        for _ in range(200):
+            at.observe(rnd.random())
+            assert at.threshold in at.percent_list
+
+    def test_window_eviction(self):
+        at = AdaptiveThreshold(window=3)
+        at.observe_many([0.1, 0.2, 0.3, 0.4])
+        assert len(at.percent_list) == 3
+        assert 0.1 not in at.percent_list
+
+    def test_reset(self):
+        at = AdaptiveThreshold()
+        at.observe_many([0.5, 0.6])
+        at.reset()
+        assert at.threshold == at.default
+        assert at.percent_list == ()
+
+    def test_rejects_out_of_range(self):
+        at = AdaptiveThreshold()
+        with pytest.raises(ValueError):
+            at.observe(1.5)
+        with pytest.raises(ValueError):
+            at.observe(-0.1)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=64))
+def test_property_threshold_bounded_by_history(pcts):
+    """From the second observation on, threshold is always an element of
+    PercentList => within [min, max] of the observed history."""
+
+    at = AdaptiveThreshold(window=16)
+    for p in pcts:
+        at.observe(p)
+    lst = at.percent_list
+    assert lst[0] <= at.threshold <= lst[-1]
+    assert list(lst) == sorted(lst)
+    # avgper consistent
+    assert at.avgper == pytest.approx(sum(lst) / len(lst))
+
+
+class TestStaticWatermarks:
+    def test_hysteresis(self):
+        sw = StaticWatermarkThreshold(high=0.45, low=0.30)
+        assert not sw.is_random(0.40)  # below high, initial state seq
+        sw.observe(0.5)
+        assert sw.is_random(0.40)  # in band, sticky random
+        sw.observe(0.2)
+        assert not sw.is_random(0.40)  # dropped below low
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            StaticWatermarkThreshold(high=0.2, low=0.5)

@@ -1,0 +1,152 @@
+"""AVL tree + log store tests (paper Section 2.5), incl. hypothesis invariants."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import AVLTree, LogRegion, RegionFullError
+from repro.core.avl import NODE_BYTES
+
+
+class TestAVL:
+    def test_insert_lookup(self):
+        t = AVLTree()
+        t.insert(100, 10, 0)
+        t.insert(50, 10, 10)
+        t.insert(150, 10, 20)
+        assert t.lookup(50).log_offset == 10
+        assert t.lookup(100).log_offset == 0
+        assert t.lookup(999) is None
+        assert len(t) == 3
+
+    def test_in_order_is_sorted_by_original_offset(self):
+        t = AVLTree()
+        for i, off in enumerate([500, 100, 900, 300, 700]):
+            t.insert(off, 10, i * 10)
+        keys = [e.offset for e in t.in_order()]
+        assert keys == sorted(keys) == [100, 300, 500, 700, 900]
+
+    def test_rewrite_same_offset_latest_wins(self):
+        t = AVLTree()
+        t.insert(100, 10, 0)
+        t.insert(100, 10, 40)  # newer log copy
+        assert len(t) == 1
+        assert t.lookup(100).log_offset == 40
+
+    def test_height_logarithmic_on_sequential_inserts(self):
+        # a plain BST would degenerate to height n here
+        t = AVLTree()
+        n = 1024
+        for i in range(n):
+            t.insert(i, 1, i)
+        assert t.height <= 1.45 * 10 + 2  # 1.44*log2(n) + O(1)
+        t.check_invariants()
+
+    def test_paper_metadata_accounting(self):
+        """Paper: 40 GB of 256 KB requests -> ~3 MB of AVL metadata."""
+
+        t = AVLTree()
+        req = 256 * 1024
+        n = (40 << 30) // req  # 163840 nodes
+        # insert a representative subset, then scale the accounting
+        for i in range(n // 64):
+            t.insert(i * req, req, i * req)
+        assert t.approx_bytes() == len(t) * NODE_BYTES
+        full_bytes = n * NODE_BYTES
+        assert 3_500_000 <= full_bytes <= 4_200_000  # ~3.75 MiB ~ paper's "about 3MB"
+
+    def test_min_max(self):
+        t = AVLTree()
+        assert t.min_key() is None and t.max_key() is None
+        for off in [5, 1, 9]:
+            t.insert(off, 1, 0)
+        assert t.min_key() == 1 and t.max_key() == 9
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=300))
+def test_property_avl_invariants(keys):
+    """Balance, BST order, height bookkeeping and count hold under any
+    insertion sequence, including duplicates."""
+
+    t = AVLTree()
+    for i, k in enumerate(keys):
+        t.insert(k, 1, i)
+    t.check_invariants()
+    assert len(t) == len(set(keys))
+    in_order = [e.offset for e in t.in_order()]
+    assert in_order == sorted(set(keys))
+    # latest duplicate wins
+    last = {}
+    for i, k in enumerate(keys):
+        last[k] = i
+    for k, i in last.items():
+        assert t.lookup(k).log_offset == i
+
+
+class TestLogRegion:
+    def test_append_and_flush_order(self):
+        r = LogRegion(1000)
+        r.append(file_id=1, offset=500, size=100)
+        r.append(file_id=1, offset=100, size=100)
+        r.append(file_id=0, offset=900, size=100)
+        order = list(r.flush_order())
+        # files ascending, offsets ascending within file
+        assert [(f, e.offset) for f, e in order] == [(0, 900), (1, 100), (1, 500)]
+
+    def test_capacity_enforced(self):
+        r = LogRegion(250)
+        r.append(0, 0, 100)
+        r.append(0, 100, 100)
+        assert not r.fits(100)
+        with pytest.raises(RegionFullError):
+            r.append(0, 200, 100)
+
+    def test_seek_counts_sorted_vs_unsorted(self):
+        """The AVL order must never need more seeks than arrival order."""
+
+        r = LogRegion(10_000)
+        # reverse arrival of a contiguous range: unsorted = n seeks, sorted = 1
+        for off in reversed(range(0, 1000, 100)):
+            r.append(0, off, 100)
+        assert r.seek_count_sorted() == 1
+        assert r.seek_count_if_unsorted() == 10
+        assert r.seek_count_sorted() <= r.seek_count_if_unsorted()
+
+    def test_flush_bytes_deduplicates(self):
+        r = LogRegion(10_000)
+        r.append(0, 0, 100)
+        r.append(0, 0, 100)  # rewrite
+        assert r.used_bytes == 200  # log grows
+        assert r.flush_bytes() == 100  # only the live copy flushes
+
+    def test_reset(self):
+        r = LogRegion(1000)
+        r.append(0, 0, 100)
+        r.reset()
+        assert r.used_bytes == 0
+        assert r.flush_bytes() == 0
+        assert list(r.flush_order()) == []
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 50), st.integers(1, 16)),
+        min_size=1,
+        max_size=200,
+    )
+)
+def test_property_log_region_flush_conservation(items):
+    """Every live (file, offset) extent appears in flush order exactly once,
+    and the sorted flush never costs more seeks than arrival order."""
+
+    r = LogRegion(1 << 20)
+    live = {}
+    for fid, slot, size in items:
+        off = slot * 64  # avoid pathological overlap aliasing
+        r.append(fid, off, size)
+        live[(fid, off)] = size
+    flushed = {(fid, e.offset): e.size for fid, e in r.flush_order()}
+    assert flushed == live
+    assert r.seek_count_sorted() <= max(r.seek_count_if_unsorted(), 1)

@@ -1,0 +1,109 @@
+"""Perf levers must preserve semantics (baseline equivalence tests).
+
+Every hillclimb lever (DESIGN.md §6b) is either bit-exact or boundedly
+lossy; these tests pin that down so optimized configs are safe to deploy.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.steps import make_train_step
+from repro.models import get_model
+from repro.optim import AdamWConfig, init_state
+
+B, S = 2, 16
+
+
+def batch_for(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jnp.ones((B, cfg.n_patches, cfg.d_model),
+                                     jnp.bfloat16) * 0.01
+    return b
+
+
+def loss_of(cfg, params, batch):
+    return float(get_model(cfg).loss_fn(params, batch))
+
+
+class TestExactLevers:
+    """Levers that must be bit-exact (pure scheduling/layout changes)."""
+
+    @pytest.mark.parametrize("arch,overrides", [
+        ("falcon-mamba-7b", dict(mamba_fused_proj=True)),
+        ("falcon-mamba-7b", dict(scan_chunk=4)),
+        ("falcon-mamba-7b", dict(scan_chunk=64)),
+        ("falcon-mamba-7b", dict(ssm_impl="pallas")),
+        ("zamba2-2.7b", dict(scan_chunk=4)),
+        ("grok-1-314b", dict(moe_group_size=8)),
+    ])
+    def test_bit_exact(self, arch, overrides):
+        cfg0 = get_smoke_config(arch)
+        cfg1 = dataclasses.replace(cfg0, **overrides)
+        key = jax.random.PRNGKey(0)
+        params = get_model(cfg0).init_params(key)
+        batch = batch_for(cfg0, jax.random.PRNGKey(1))
+        l0 = loss_of(cfg0, params, batch)
+        l1 = loss_of(cfg1, params, batch)
+        assert l0 == pytest.approx(l1, abs=2e-3), (arch, overrides)
+
+    def test_microbatch_grad_equivalence(self):
+        cfg0 = get_smoke_config("qwen3-1.7b")
+        cfg1 = dataclasses.replace(cfg0, microbatch=1)
+        key = jax.random.PRNGKey(0)
+        outs = []
+        for cfg in (cfg0, cfg1):
+            m = get_model(cfg)
+            params = m.init_params(key)
+            st = init_state(params)
+            step = make_train_step(m, AdamWConfig(lr=1e-3))
+            _, _, metrics = step(params, st, batch_for(cfg, jax.random.PRNGKey(1)))
+            outs.append((float(metrics["loss"]), float(metrics["grad_norm"])))
+        assert outs[0][0] == pytest.approx(outs[1][0], abs=1e-4)
+        assert outs[0][1] == pytest.approx(outs[1][1], rel=3e-3)
+
+
+class TestLossyLevers:
+    """Quantization levers: bounded deviation, finite outputs."""
+
+    def test_bf16_softmax_close(self):
+        cfg0 = get_smoke_config("qwen3-1.7b")
+        cfg1 = dataclasses.replace(cfg0, softmax_dtype="bfloat16")
+        params = get_model(cfg0).init_params(jax.random.PRNGKey(0))
+        batch = batch_for(cfg0, jax.random.PRNGKey(1))
+        l0, l1 = loss_of(cfg0, params, batch), loss_of(cfg1, params, batch)
+        assert abs(l0 - l1) < 0.05
+
+    def test_bf16_moe_dispatch_close(self):
+        cfg0 = get_smoke_config("moonshot-v1-16b-a3b")
+        cfg1 = dataclasses.replace(cfg0, moe_dispatch_dtype="bfloat16")
+        params = get_model(cfg0).init_params(jax.random.PRNGKey(0))
+        batch = batch_for(cfg0, jax.random.PRNGKey(1))
+        assert abs(loss_of(cfg0, params, batch)
+                   - loss_of(cfg1, params, batch)) < 0.05
+
+    def test_fp8_param_storage_finite_and_sane(self):
+        cfg0 = get_smoke_config("grok-1-314b")
+        cfg1 = dataclasses.replace(cfg0, param_dtype="float8_e4m3fn",
+                                   matmul_weight_dtype="bfloat16")
+        m1 = get_model(cfg1)
+        params = m1.init_params(jax.random.PRNGKey(0))
+        # init respects the storage dtype
+        leaf = jax.tree.leaves(params)[0]
+        batch = batch_for(cfg1, jax.random.PRNGKey(1))
+        l1 = m1.loss_fn(params, batch)
+        assert bool(jnp.isfinite(l1))
+
+    def test_embed_onehot_exact(self):
+        cfg0 = get_smoke_config("qwen3-1.7b")
+        cfg1 = dataclasses.replace(cfg0, embed_onehot=True)
+        params = get_model(cfg0).init_params(jax.random.PRNGKey(0))
+        batch = batch_for(cfg0, jax.random.PRNGKey(1))
+        assert loss_of(cfg0, params, batch) == pytest.approx(
+            loss_of(cfg1, params, batch), abs=1e-3)

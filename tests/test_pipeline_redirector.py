@@ -1,0 +1,202 @@
+"""Two-region pipeline + redirector tests (paper Sections 2.3/2.4)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AdaptiveThreshold,
+    DataRedirector,
+    Device,
+    Request,
+    SingleRegionBuffer,
+    TwoRegionPipeline,
+)
+from repro.core.pipeline import FlushState
+
+
+def mk_pipeline(cap=1000, traffic_aware=True, pct=1.0):
+    holder = {"pct": pct}
+    p = TwoRegionPipeline(
+        cap, traffic_aware=traffic_aware, flush_gate=0.5,
+        percentage_source=lambda: holder["pct"],
+    )
+    return p, holder
+
+
+class TestTwoRegionPipeline:
+    def test_fill_swap_flush_cycle(self):
+        p, _ = mk_pipeline(cap=300)
+        for i in range(3):
+            out = p.append(0, i * 100, 100)
+            assert out.ok and not out.swapped
+        # region R0 now full; next append swaps and schedules flush
+        out = p.append(0, 300, 100)
+        assert out.ok and out.swapped
+        assert p.flush_job is not None
+        assert p.flush_job.bytes_total == 300
+        assert p.flush_state() is FlushState.FLUSHING
+
+    def test_blocks_when_both_full(self):
+        p, _ = mk_pipeline(cap=200)
+        for i in range(2):
+            p.append(0, i * 100, 100)
+        p.append(0, 200, 100)  # swap; R0 flushing
+        p.append(0, 300, 100)  # R1 full
+        out = p.append(0, 400, 100)
+        assert out.blocked and not out.ok
+        assert p.blocked_events == 1
+        # drain R0's flush -> appends work again
+        p.force_flush()
+        p.flush_progress(10**9)
+        out = p.append(0, 400, 100)
+        assert out.ok and out.swapped  # swapped back to the freed region
+
+    def test_traffic_aware_pause_and_resume(self):
+        """Paper Section 2.4.2: low random percentage => flush paused."""
+
+        p, holder = mk_pipeline(cap=200, pct=0.1)
+        p.append(0, 0, 100)
+        p.append(0, 100, 100)
+        p.append(0, 200, 100)  # swap, flush scheduled
+        assert p.flush_state() is FlushState.PAUSED  # pct 0.1 < gate 0.5
+        holder["pct"] = 0.9
+        assert p.flush_state() is FlushState.FLUSHING
+        holder["pct"] = 0.2
+        assert p.flush_state() is FlushState.PAUSED
+        p.force_flush()  # space pressure overrides the gate
+        assert p.flush_state() is FlushState.FLUSHING
+
+    def test_immediate_mode_never_pauses(self):
+        p, _ = mk_pipeline(cap=200, traffic_aware=False, pct=0.0)
+        p.append(0, 0, 100)
+        p.append(0, 100, 100)
+        p.append(0, 200, 100)
+        assert p.flush_state() is FlushState.FLUSHING  # SSDUP behaviour
+
+    def test_flush_completion_resets_region(self):
+        p, _ = mk_pipeline(cap=200)
+        p.append(0, 0, 100)
+        p.append(0, 100, 100)
+        p.append(0, 200, 100)
+        region = p.flush_job.region
+        used = p.flush_progress(10**9)
+        assert used == 200
+        assert p.flush_job is None
+        assert region.used_bytes == 0
+        assert p.flushes_completed == 1
+
+    def test_drain_schedules_everything(self):
+        p, _ = mk_pipeline(cap=1000)
+        p.append(0, 0, 100)
+        p.drain()
+        assert p.flush_job is not None and p.flush_job.forced
+        p.flush_progress(10**9)
+        assert p.buffered_bytes == 0
+
+    def test_oversized_request_rejected(self):
+        p, _ = mk_pipeline(cap=100)
+        p.append(0, 0, 100)
+        with pytest.raises(ValueError):
+            p.append(0, 100, 5000)  # larger than a whole region
+
+
+class TestSingleRegionBuffer:
+    def test_blocks_while_flushing(self):
+        b = SingleRegionBuffer(200, percentage_source=lambda: 1.0)
+        assert b.append(0, 0, 100).ok
+        out = b.append(0, 100, 100)  # fills -> eager flush scheduled
+        assert out.ok
+        assert b.flush_job is not None and b.flush_job.forced
+        out = b.append(0, 200, 50)
+        assert out.blocked
+        b.flush_progress(10**9)
+        assert b.append(0, 200, 50).ok
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.integers(1, 60), min_size=1, max_size=200),
+    st.integers(100, 400),
+)
+def test_property_pipeline_conservation(sizes, cap):
+    """No bytes are ever lost: appended == flushed + still buffered, and a
+    region never exceeds its capacity."""
+
+    p, _ = mk_pipeline(cap=cap)
+    appended = 0
+    off = 0
+    for s in sizes:
+        out = p.append(0, off, s)
+        if out.blocked:
+            p.force_flush()
+            p.flush_progress(10**9)
+            out = p.append(0, off, s)
+        assert out.ok
+        appended += s
+        off += s
+        for r in p.regions:
+            assert r.used_bytes <= r.capacity
+    p.drain()
+    while p.flush_job is not None:
+        p.force_flush()
+        p.flush_progress(10**9)
+    assert p.total_flushed_bytes == appended
+    assert p.buffered_bytes == 0
+
+
+def make_stream(rf: int, n: int = 17, base: int = 0) -> list[Request]:
+    """A stream of n requests whose random percentage is rf/(n-1):
+    the first ``rf`` sorted-adjacent gaps jump, the rest are contiguous."""
+
+    assert 0 <= rf <= n - 1
+    offs = []
+    cur = base
+    for i in range(n):
+        offs.append(cur)
+        cur += 100 + (999_000 if i < rf else 0)
+    return [Request(o, 100) for o in offs]
+
+
+class TestRedirector:
+    def test_starts_on_hdd(self):
+        r = DataRedirector(AdaptiveThreshold(), stream_len=17)
+        routed = r.route_stream(make_stream(rf=16))
+        assert routed.device is Device.HDD  # first stream: no history yet
+        assert routed.percentage == pytest.approx(1.0)
+
+    def test_switches_to_ssd_on_rising_randomness(self):
+        r = DataRedirector(AdaptiveThreshold(), stream_len=17)
+        for k, rf in enumerate([2, 11, 14]):  # pct 0.125, ~0.69, 0.875
+            r.route_stream(make_stream(rf, base=k * 10**9))
+        assert r.current_device is Device.SSD
+        routed = r.route_stream(make_stream(15, base=9 * 10**9))
+        assert routed.device is Device.SSD
+
+    def test_switches_back_on_sequential(self):
+        r = DataRedirector(AdaptiveThreshold(), stream_len=17)
+        for k, rf in enumerate([2, 11, 14, 15]):
+            r.route_stream(make_stream(rf, base=k * 10**9))
+        assert r.current_device is Device.SSD
+        # sustained sequential traffic pulls it back
+        for k in range(2):
+            r.route_stream(make_stream(1, base=(10 + k) * 10**9))
+        routed = r.route_stream(make_stream(1, base=20 * 10**9))
+        assert routed.device is Device.HDD
+
+    def test_route_generator_and_stats(self):
+        r = DataRedirector(AdaptiveThreshold(), stream_len=17)
+        reqs = make_stream(1) + make_stream(14, base=10**9)
+        routed = list(r.route(iter(reqs)))
+        assert len(routed) == 2
+        total = r.bytes_to[Device.HDD] + r.bytes_to[Device.SSD]
+        assert total == sum(q.size for q in reqs)
+        assert 0.0 <= r.ssd_byte_ratio <= 1.0
+
+    def test_finish_flushes_tail(self):
+        r = DataRedirector(AdaptiveThreshold(), stream_len=128)
+        for q in make_stream(1, n=10):
+            list(r.route([q]))
+        tail = r.finish()
+        assert tail is not None and len(tail.stream) == 10
+        assert r.finish() is None

@@ -1,0 +1,62 @@
+"""Hypothesis property tests: sharding-rule invariants.
+
+System invariants: a PartitionSpec never reuses a mesh axis; every sharded
+dim is exactly divisible by its assigned axis product; unknown/None logical
+names always replicate.
+"""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.distributed.sharding import DEFAULT_RULES, spec_for
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+MESHES = [
+    FakeMesh(data=16, model=16),
+    FakeMesh(pod=2, data=16, model=16),
+    FakeMesh(data=4, model=8),
+]
+
+LOGICAL = st.sampled_from(
+    [None, "batch", "embed", "vocab", "heads", "kv_heads", "mlp",
+     "experts", "inner", "cache_seq", "layers", "state", "not-a-rule"])
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    mesh_i=st.integers(0, len(MESHES) - 1),
+    dims=st.lists(
+        st.tuples(st.integers(1, 4096), LOGICAL), min_size=1, max_size=6),
+)
+def test_spec_never_reuses_axes_and_always_divides(mesh_i, dims):
+    mesh = MESHES[mesh_i]
+    shape = tuple(d for d, _ in dims)
+    logical = tuple(l for _, l in dims)
+    spec = spec_for(shape, logical, mesh, DEFAULT_RULES)
+    assert len(spec) == len(shape)
+
+    used: list[str] = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            assert a in mesh.shape, f"unknown mesh axis {a}"
+            assert a not in used, f"mesh axis {a} reused"
+            used.append(a)
+            size *= mesh.shape[a]
+        assert dim % size == 0, f"dim {dim} not divisible by {size}"
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims=st.lists(st.integers(1, 128), min_size=1, max_size=4))
+def test_none_logical_always_replicates(dims):
+    mesh = MESHES[0]
+    spec = spec_for(tuple(dims), tuple([None] * len(dims)), mesh, DEFAULT_RULES)
+    assert all(e is None for e in spec)

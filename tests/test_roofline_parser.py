@@ -1,0 +1,84 @@
+"""HLO collective parser + roofline-term unit tests."""
+
+import pytest
+
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    derive_terms,
+    model_flops_per_step,
+    parse_collectives,
+)
+from repro.configs import SHAPE_CELLS, get_config
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %x = bf16[16,1024]{1,0} parameter(0)
+  %ar = bf16[16,1024]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = f32[64,64]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = bf16[8,128]{1,0} reduce-scatter(%x), replica_groups={{0,1}}, to_apply=%add
+  %cp = f32[4,4]{1,0} collective-permute(%x), source_target_pairs={{0,1},{1,0}}
+  %a2a = (bf16[2,2]{1,0}, bf16[2,2]{1,0}) all-to-all(%x, %y), replica_groups={{0,1,2,3}}
+  %ags = bf16[32]{0} all-gather-start(%x), replica_groups={{0,1,2,3}}
+  %agd = bf16[32]{0} all-gather-done(%ags)
+  %dot = f32[4,4]{1,0} dot(%cp, %cp)
+}
+"""
+
+
+class TestParser:
+    def test_counts_and_kinds(self):
+        st = parse_collectives(HLO_SAMPLE)
+        assert st.counts["all-reduce"] == 1
+        assert st.counts["all-gather"] == 2  # plain + -start, -done skipped
+        assert st.counts["reduce-scatter"] == 1
+        assert st.counts["collective-permute"] == 1
+        assert st.counts["all-to-all"] == 1
+
+    def test_byte_accounting(self):
+        st = parse_collectives(HLO_SAMPLE)
+        assert st.bytes_by_kind["all-reduce"] == 16 * 1024 * 2
+        # tuple output: two bf16[2,2]
+        assert st.bytes_by_kind["all-to-all"] == 2 * (2 * 2 * 2)
+
+    def test_ring_factors(self):
+        # one all-reduce of N bytes in a group of 4 -> 2*(3/4)*N link bytes
+        text = ("%ar = f32[10]{0} all-reduce(%x), "
+                "replica_groups={{0,1,2,3}}, to_apply=%a")
+        st = parse_collectives(text)
+        assert st.link_bytes == pytest.approx(2 * 0.75 * 40)
+
+    def test_iota_replica_groups(self):
+        text = ("%ag = f32[16]{0} all-gather(%x), "
+                "replica_groups=[16,16]<=[256], dimensions={0}")
+        st = parse_collectives(text)
+        # group size 16 -> factor 15/16
+        assert st.link_bytes == pytest.approx((15 / 16) * 64)
+
+    def test_ignores_non_collectives(self):
+        st = parse_collectives("%dot = f32[4,4]{1,0} dot(%a, %b)")
+        assert st.link_bytes == 0.0 and not st.counts
+
+
+class TestTerms:
+    def test_derive_and_dominance(self):
+        st = parse_collectives(HLO_SAMPLE)
+        t = derive_terms({"flops": 1e15, "bytes accessed": 1e9}, st)
+        assert t.compute_s == pytest.approx(1e15 / PEAK_FLOPS)
+        assert t.memory_s == pytest.approx(1e9 / HBM_BW)
+        assert t.dominant == "compute"
+        assert t.step_time_s == max(t.compute_s, t.memory_s, t.collective_s)
+
+    def test_model_flops_train_vs_decode(self):
+        cfg = get_config("qwen3-1.7b")
+        train = model_flops_per_step(cfg, SHAPE_CELLS["train_4k"])
+        dec = model_flops_per_step(cfg, SHAPE_CELLS["decode_32k"])
+        # train: 6*N*B*S; decode: 2*N*B — many orders of magnitude apart
+        assert train / dec == pytest.approx(
+            3 * 256 * 4096 / 128, rel=1e-6)
+
+    def test_moe_uses_active_params(self):
+        cfg = get_config("grok-1-314b")
+        assert cfg.active_param_count() < 0.45 * cfg.param_count()

@@ -1,0 +1,58 @@
+"""Numerical validation of the shard_map token-stationary FFN schedule.
+
+Runs on a REAL 8-device mesh (host platform override in a subprocess-safe
+way: this test module must import jax first in the session OR skip) and
+checks the explicit-collective schedule computes exactly the same FFN as
+the dense reference.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import sys
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.bench_shardmap_decode import build_fns
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+gspmd_ffn, shardmap_ffn, xspec, wspec, w2spec = build_fns(mesh)
+
+rng = np.random.default_rng(0)
+B, D, F = 8, 16, 32
+x = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+w1 = jnp.asarray(rng.normal(size=(D, F)) * 0.1, jnp.float32)
+w2 = jnp.asarray(rng.normal(size=(F, D)) * 0.1, jnp.float32)
+
+with mesh:
+    args = (jax.device_put(x, NamedSharding(mesh, xspec)),
+            jax.device_put(w1, NamedSharding(mesh, wspec)),
+            jax.device_put(w2, NamedSharding(mesh, w2spec)))
+    ref = np.asarray(jax.jit(gspmd_ffn)(*args))
+    got = np.asarray(jax.jit(shardmap_ffn)(*args))
+np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+print("SHARDMAP_OK")
+"""
+
+
+def test_token_stationary_schedule_matches_dense():
+    """Run in a subprocess so the 8-device override doesn't clash with the
+    already-initialized single-device jax in this test session."""
+
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=300,
+    )
+    assert "SHARDMAP_OK" in out.stdout, out.stdout + out.stderr

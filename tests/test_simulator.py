@@ -1,0 +1,163 @@
+"""Integration tests: the I/O-node simulator reproduces the paper's claims.
+
+These tests assert the paper's *relative* findings under the calibrated
+device model (EXPERIMENTS.md §Paper-validation records the full numbers):
+
+* Fig. 6   — throughput falls as random percentage rises (inverse corr.)
+* Fig. 8   — SSDUP+ beats plain OrangeFS on random-heavy loads while
+             buffering far less than everything
+* Fig. 11  — SSDUP+ uses less SSD than SSDUP at high process counts
+* Fig. 13  — traffic-aware flushing beats immediate flushing under a
+             mixed load with a constrained SSD
+* Fig. 14  — longer compute gaps help plain BB; SSDUP+ tolerates short gaps
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Gap,
+    IONodeSimulator,
+    StreamGrouper,
+    ior,
+    mixed,
+    relabel,
+    run_schemes,
+    stream_percentage,
+)
+from repro.core.workloads import GiB, MiB
+
+SMALL = GiB // 2  # keep tests fast; trends already visible at this size
+
+
+def agg(result):
+    return 2 * result.throughput_mbs  # paper reports 2-I/O-node aggregates
+
+
+class TestFig6InverseCorrelation:
+    def test_throughput_falls_as_randomness_rises(self):
+        tps, rps = [], []
+        for n in [8, 32, 128]:
+            w = ior("strided", n, total_bytes=SMALL)
+            g = StreamGrouper(128)
+            rps.append(np.mean([stream_percentage(s) for s in g.push_many(w.trace)]))
+            r = IONodeSimulator(scheme="orangefs").run(list(w.trace))
+            tps.append(r.throughput_mbs)
+        assert rps[0] < rps[1] < rps[2]
+        assert tps[0] >= tps[1] > tps[2]
+
+    def test_random_pattern_is_slowest(self):
+        results = {}
+        for pat in ["segmented-contiguous", "segmented-random"]:
+            w = ior(pat, 16, total_bytes=SMALL)
+            results[pat] = IONodeSimulator(scheme="orangefs").run(list(w.trace))
+        assert (
+            results["segmented-random"].throughput_mbs
+            < results["segmented-contiguous"].throughput_mbs
+        )
+
+
+class TestFig8SchemeComparison:
+    def test_ssdupplus_beats_orangefs_on_random_heavy(self):
+        w = ior("strided", 128, total_bytes=SMALL)
+        res = run_schemes(w.trace, schemes=("orangefs", "ssdup+"),
+                          ssd_capacity=SMALL * 2)
+        assert res["ssdup+"].throughput_mbs > 1.2 * res["orangefs"].throughput_mbs
+
+    def test_ssdupplus_buffers_selectively_at_low_contention(self):
+        w = ior("strided", 16, total_bytes=SMALL)
+        res = run_schemes(w.trace, schemes=("ssdup+",), ssd_capacity=SMALL * 2)
+        # low randomness: most data still goes straight to HDD
+        assert res["ssdup+"].ssd_byte_ratio < 0.5
+
+    def test_fig11_ssd_capacity_saving_vs_ssdup(self):
+        """Paper: at 64 procs SSDUP buffers ~99% but SSDUP+ ~47%."""
+
+        w = ior("strided", 64, total_bytes=SMALL)
+        res = run_schemes(w.trace, schemes=("ssdup", "ssdup+"),
+                          ssd_capacity=SMALL * 2)
+        assert res["ssdup"].ssd_byte_ratio > 0.8
+        assert res["ssdup+"].ssd_byte_ratio < 0.75
+        # ... at nearly the same throughput (within 15%)
+        assert res["ssdup+"].throughput_mbs > 0.85 * res["ssdup"].throughput_mbs
+
+
+class TestFig13TrafficAwareFlushing:
+    # the paper's effect needs the real phase structure: app bursts several
+    # streams long relative to the region size — use the paper-scale trace
+    # (4 GiB per app, 4 GiB SSD -> 2 GiB regions), same as Fig. 13.
+    @pytest.fixture(scope="class")
+    def mixed_load(self):
+        w1 = relabel(ior("segmented-contiguous", 16, total_bytes=4 * GiB, seed=1),
+                     app_id=0, file_id=0)
+        w2 = relabel(ior("segmented-random", 16, total_bytes=4 * GiB, seed=2),
+                     app_id=1, file_id=1)
+        return mixed(w1, w2, burst_requests=512)
+
+    def test_ssdupplus_beats_ssdup_under_constrained_ssd(self, mixed_load):
+        cap = 4 * GiB  # SSD holds half the 8 GiB mixed load
+        res = run_schemes(mixed_load.trace, schemes=("ssdup", "ssdup+"),
+                          ssd_capacity=cap)
+        assert res["ssdup+"].throughput_mbs >= res["ssdup"].throughput_mbs
+        # the win comes from pausing: SSDUP never pauses, SSDUP+ does
+        assert res["ssdup"].flush_paused_seconds == 0.0
+        assert res["ssdup+"].flush_paused_seconds > 0.0
+
+    def test_plain_bb_suffers_overflow(self, mixed_load):
+        cap = 4 * GiB
+        res = run_schemes(mixed_load.trace, schemes=("orangefs-bb", "ssdup+"),
+                          ssd_capacity=cap)
+        assert res["ssdup+"].throughput_mbs > res["orangefs-bb"].throughput_mbs
+        assert res["orangefs-bb"].bytes_to_hdd_direct > 0  # overflowed
+
+
+class TestFig14ComputeGaps:
+    def _two_phase(self, gap_s):
+        wa = relabel(ior("segmented-random", 16, total_bytes=SMALL // 2, seed=5),
+                     app_id=0, file_id=0)
+        wb = relabel(ior("segmented-random", 16, total_bytes=SMALL // 2, seed=6),
+                     app_id=1, file_id=1, start_time=1e9)
+        return list(wa.trace) + [Gap(float(gap_s))] + list(wb.trace)
+
+    def test_gap_helps_plain_bb(self):
+        cap = SMALL // 4  # buffer holds half of each phase
+        slow = IONodeSimulator(scheme="orangefs-bb", ssd_capacity=cap).run(
+            self._two_phase(0))
+        fast = IONodeSimulator(scheme="orangefs-bb", ssd_capacity=cap).run(
+            self._two_phase(10))
+        assert fast.throughput_mbs > slow.throughput_mbs
+
+    def test_ssdupplus_tolerates_zero_gap(self):
+        """SSDUP+'s pipeline means a 0s compute gap costs it far less than
+        plain BB (paper: 20% vs 34% below peak)."""
+
+        cap = SMALL // 4
+        bb = IONodeSimulator(scheme="orangefs-bb", ssd_capacity=cap).run(
+            self._two_phase(0))
+        sp = IONodeSimulator(scheme="ssdup+", ssd_capacity=cap).run(
+            self._two_phase(0))
+        assert sp.throughput_mbs > bb.throughput_mbs
+
+
+class TestAccounting:
+    def test_bytes_conserved(self):
+        w = ior("strided", 32, total_bytes=SMALL)
+        for s, r in run_schemes(w.trace, ssd_capacity=SMALL).items():
+            assert r.total_bytes == w.total_bytes, s
+            assert r.bytes_to_ssd + r.bytes_to_hdd_direct == r.total_bytes
+
+    def test_metadata_overhead_is_tiny(self):
+        """Paper Table 1 / Section 2.5: AVL metadata is ~0.008% of data."""
+
+        w = ior("segmented-random", 16, total_bytes=SMALL)
+        r = IONodeSimulator(scheme="ssdup+", ssd_capacity=SMALL * 2).run(list(w.trace))
+        if r.bytes_to_ssd:
+            assert r.metadata_bytes <= r.bytes_to_ssd * 1e-3
+
+    def test_gap_excluded_from_io_time(self):
+        w = ior("strided", 16, total_bytes=64 * MiB)
+        base = IONodeSimulator(scheme="orangefs").run(list(w.trace))
+        gapped = IONodeSimulator(scheme="orangefs").run(
+            [Gap(5.0)] + list(w.trace))
+        assert gapped.io_seconds == pytest.approx(base.io_seconds)
+        assert gapped.total_seconds == pytest.approx(base.total_seconds + 5.0)

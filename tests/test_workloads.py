@@ -1,0 +1,75 @@
+"""Workload-generator calibration and structure tests (paper §2.2/Fig. 6)."""
+
+import numpy as np
+import pytest
+
+from repro.core import StreamGrouper, hpio, ior, mixed, mpi_tile_io, relabel, stream_percentage
+from repro.core.workloads import GiB, MiB, contention_skew
+
+
+def mean_rp(w, stream_len=128):
+    g = StreamGrouper(stream_len)
+    ps = [stream_percentage(s) for s in g.push_many(w.trace)]
+    return float(np.mean(ps))
+
+
+class TestIORCalibration:
+    def test_strided_rp_monotone_in_procs(self):
+        rps = [mean_rp(ior("strided", n, total_bytes=GiB)) for n in (8, 32, 128)]
+        assert rps[0] < rps[1] < rps[2]
+
+    def test_strided_matches_paper_band(self):
+        """Fig. 6 targets 7/28/71% at 8/32/128 procs (±10 points)."""
+
+        for n, target in ((8, 0.07), (32, 0.28), (128, 0.71)):
+            rp = mean_rp(ior("strided", n, total_bytes=2 * GiB))
+            assert abs(rp - target) < 0.12, (n, rp, target)
+
+    def test_segmented_random_is_nearly_fully_random(self):
+        assert mean_rp(ior("segmented-random", 16, total_bytes=GiB)) > 0.85
+
+    def test_segmented_contiguous_structural_rp(self):
+        """Paper Fig. 5a: 16 sequential writers -> RF 15 of 127 after sort."""
+
+        rp = mean_rp(ior("segmented-contiguous", 16, total_bytes=GiB))
+        assert rp == pytest.approx(15 / 127, abs=0.04)
+
+    def test_request_accounting(self):
+        w = ior("strided", 8, total_bytes=256 * MiB)
+        assert w.total_bytes == 256 * MiB
+        assert len(w.trace) == 256 * MiB // (256 * 1024)
+        offs = sorted(r.offset for r in w.trace)
+        assert offs == list(range(0, 256 * MiB, 256 * 1024))  # full coverage
+
+
+class TestOtherGenerators:
+    def test_hpio_contiguous_vs_noncontiguous(self):
+        cc = mean_rp(hpio(True, 32, total_bytes=256 * MiB))
+        cnc = mean_rp(hpio(False, 32, total_bytes=256 * MiB))
+        assert cnc > cc
+
+    def test_tileio_2d_more_random_than_1d(self):
+        d1 = mean_rp(mpi_tile_io(32, one_dimensional=True, total_bytes=256 * MiB))
+        d2 = mean_rp(mpi_tile_io(32, one_dimensional=False, total_bytes=256 * MiB))
+        assert d2 >= d1
+
+    def test_mixed_conserves_and_orders(self):
+        a = relabel(ior("strided", 8, total_bytes=64 * MiB, seed=1), 0, 0)
+        b = relabel(ior("segmented-random", 8, total_bytes=64 * MiB, seed=2), 1, 1)
+        m = mixed(a, b)
+        assert len(m) == len(a.trace) + len(b.trace)
+        times = [r.time for r in m.trace]
+        assert times == sorted(times)
+
+    def test_mixed_bursty_keeps_app_character(self):
+        a = relabel(ior("segmented-contiguous", 8, total_bytes=64 * MiB, seed=1), 0, 0)
+        b = relabel(ior("segmented-random", 8, total_bytes=64 * MiB, seed=2), 1, 1)
+        m = mixed(a, b, burst_requests=256)
+        g = StreamGrouper(128)
+        ps = [stream_percentage(s) for s in g.push_many(m.trace)]
+        # bursty interleave -> wide spread: pure sequential streams exist
+        # alongside random(ish) ones (vs ~uniform blend without bursts)
+        assert min(ps) < 0.2 and max(ps) > 0.45
+
+    def test_contention_skew_grows(self):
+        assert contention_skew(128) > contention_skew(8)

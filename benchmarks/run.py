@@ -20,6 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from benchmarks import (  # noqa: E402
     bench_adaptive,
     bench_checkpoint,
+    bench_fleet,
     bench_hpio,
     bench_kernels,
     bench_overhead,
@@ -42,6 +43,7 @@ SUITES = {
     "checkpoint": lambda tb: bench_checkpoint.run(),
     "kernels": lambda tb: bench_kernels.run(),
     "shardmap_decode": lambda tb: bench_shardmap_decode.run(),
+    "fleet": lambda tb: bench_fleet.run(tb),
 }
 
 

@@ -11,6 +11,10 @@ Layering:
 * workloads     — :mod:`repro.core.workloads` (IOR/HPIO/MPI-Tile-IO)
 * production IO — :mod:`repro.core.burst_buffer` (real-byte facade used by
                   the checkpoint path)
+* trace batch   — :mod:`repro.core.trace` (struct-of-arrays traces +
+                  vectorized per-stream scoring)
+* fleet         — :mod:`repro.core.fleet` (multi-node sharded replay,
+                  paper's aggregate evaluation scaled to N nodes)
 """
 
 from .adaptive import AdaptiveThreshold, StaticWatermarkThreshold
@@ -31,6 +35,8 @@ from .random_factor import (
 )
 from .redirector import DataRedirector, Device, RoutedStream
 from .simulator import Gap, IONodeSimulator, SimResult, run_schemes
+from .trace import StreamScores, TraceBatch, compute_stream_scores
+from .fleet import FleetResult, FleetSimulator, run_fleet_schemes
 from .workloads import Workload, hpio, ior, mixed, mpi_tile_io, relabel
 
 __all__ = [
@@ -62,6 +68,12 @@ __all__ = [
     "IONodeSimulator",
     "SimResult",
     "run_schemes",
+    "StreamScores",
+    "TraceBatch",
+    "compute_stream_scores",
+    "FleetResult",
+    "FleetSimulator",
+    "run_fleet_schemes",
     "Workload",
     "ior",
     "hpio",

@@ -1,0 +1,202 @@
+"""Multi-node fleet simulator (the paper's testbed, scaled out).
+
+The paper evaluates SSDUP+ on an OrangeFS deployment with multiple I/O
+nodes and reports *aggregate* throughput (Fig. 6/8/11 are 2-node
+aggregates).  The seed repo could only replay a trace against one node;
+this module shards a server-side arrival trace across N I/O nodes and
+replays each shard through :class:`repro.core.simulator.IONodeSimulator`,
+with all per-stream scoring done up front in one vectorized pass
+(:func:`repro.core.trace.compute_stream_scores`) instead of per-stream
+NumPy calls inside the replay loop.
+
+Sharding policies come from :mod:`repro.distributed.sharding`
+(``round-robin-app``, ``hash-file``, ``range-offset``) — each is a pure
+``request -> node`` assignment, so the shards partition the trace exactly
+(no byte is dropped or duplicated) and compute gaps are replicated to
+every node (a compute phase idles the whole fleet).
+
+Aggregation matches the paper's accounting: the fleet's I/O time is the
+**straggler's** (apps block on their slowest I/O server), aggregate
+throughput is total bytes over that time, and ``load_imbalance`` is
+max-over-mean node bytes (1.0 = perfectly balanced).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.distributed.sharding import TRACE_POLICIES, assign_nodes
+
+from .random_factor import DEFAULT_STREAM_LEN
+from .simulator import IONodeSimulator, SimResult
+from .trace import (
+    SCORE_BACKENDS,
+    TraceBatch,
+    TraceItem,
+    compute_stream_scores,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetResult:
+    """Aggregate of one fleet replay: per-node results + fleet metrics."""
+
+    scheme: str
+    policy: str
+    num_nodes: int
+    node_results: tuple[SimResult, ...]
+
+    # -- fleet-level accounting ----------------------------------------
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.total_bytes for r in self.node_results)
+
+    @property
+    def bytes_to_ssd(self) -> int:
+        return sum(r.bytes_to_ssd for r in self.node_results)
+
+    @property
+    def bytes_to_hdd_direct(self) -> int:
+        return sum(r.bytes_to_hdd_direct for r in self.node_results)
+
+    @property
+    def ssd_byte_ratio(self) -> float:
+        return self.bytes_to_ssd / self.total_bytes if self.total_bytes else 0.0
+
+    @property
+    def io_seconds(self) -> float:
+        """Fleet I/O time = the straggler node's I/O time."""
+
+        return max((r.io_seconds for r in self.node_results), default=0.0)
+
+    @property
+    def total_seconds(self) -> float:
+        return max((r.total_seconds for r in self.node_results), default=0.0)
+
+    @property
+    def straggler(self) -> int:
+        """Index of the node whose I/O time bounds the fleet."""
+
+        secs = [r.io_seconds for r in self.node_results]
+        return int(np.argmax(secs)) if secs else 0
+
+    @property
+    def throughput_mbs(self) -> float:
+        """Aggregate fleet throughput (bytes over straggler time)."""
+
+        t = self.io_seconds
+        return self.total_bytes / t / 1e6 if t else 0.0
+
+    @property
+    def node_throughputs_mbs(self) -> tuple[float, ...]:
+        return tuple(r.throughput_mbs for r in self.node_results)
+
+    @property
+    def node_bytes(self) -> tuple[int, ...]:
+        return tuple(r.total_bytes for r in self.node_results)
+
+    @property
+    def load_imbalance(self) -> float:
+        """max / mean of per-node byte loads; 1.0 = perfectly balanced."""
+
+        if not self.node_results or not self.total_bytes:
+            return 1.0
+        loads = np.asarray(self.node_bytes, dtype=np.float64)
+        return float(loads.max() / loads.mean())
+
+
+class FleetSimulator:
+    """Shard one arrival trace over N I/O nodes and replay each shard.
+
+    Parameters mirror :class:`IONodeSimulator` (``node_kwargs`` are passed
+    through to every node — ``ssd_capacity`` is *per node*), plus:
+
+    num_nodes:
+        Fleet size.
+    policy:
+        Trace-sharding policy name from
+        :data:`repro.distributed.sharding.TRACE_POLICIES`.
+    score_backend:
+        Backend for the up-front batched stream scoring: ``"numpy"``
+        (exact, default), ``"jnp"``, or ``"pallas"``.
+    """
+
+    def __init__(
+        self,
+        num_nodes: int = 2,
+        scheme: str = "ssdup+",
+        policy: str = "round-robin-app",
+        stream_len: int = DEFAULT_STREAM_LEN,
+        score_backend: str = "numpy",
+        **node_kwargs,
+    ):
+        if num_nodes < 1:
+            raise ValueError(f"num_nodes must be >= 1, got {num_nodes}")
+        if policy not in TRACE_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; choose from {sorted(TRACE_POLICIES)}"
+            )
+        if score_backend not in SCORE_BACKENDS:
+            raise ValueError(
+                f"score_backend must be one of {SCORE_BACKENDS}, "
+                f"got {score_backend!r}"
+            )
+        self.num_nodes = num_nodes
+        self.scheme = scheme
+        self.policy = policy
+        self.stream_len = stream_len
+        self.score_backend = score_backend
+        self.node_kwargs = node_kwargs
+
+    # ------------------------------------------------------------------
+    def shard(self, batch: TraceBatch) -> list[TraceBatch]:
+        """Partition a batch into per-node sub-batches under the policy."""
+
+        assignment = assign_nodes(
+            self.policy, batch.offsets, batch.file_ids, batch.app_ids,
+            self.num_nodes,
+        )
+        return batch.shard(assignment, self.num_nodes)
+
+    def run(self, trace: TraceBatch | Sequence[TraceItem]) -> FleetResult:
+        batch = (
+            trace if isinstance(trace, TraceBatch) else TraceBatch.from_items(trace)
+        )
+        shards = self.shard(batch)
+        results = []
+        for shard in shards:
+            scores = compute_stream_scores(
+                shard, self.stream_len, backend=self.score_backend
+            )
+            node = IONodeSimulator(
+                scheme=self.scheme, stream_len=self.stream_len,
+                **self.node_kwargs,
+            )
+            results.append(node.run(shard.to_items(), scores=scores))
+        return FleetResult(
+            scheme=self.scheme,
+            policy=self.policy,
+            num_nodes=self.num_nodes,
+            node_results=tuple(results),
+        )
+
+
+def run_fleet_schemes(
+    trace: TraceBatch | Sequence[TraceItem],
+    num_nodes: int = 2,
+    schemes: Sequence[str] = ("orangefs", "orangefs-bb", "ssdup", "ssdup+"),
+    policy: str = "round-robin-app",
+    **kwargs,
+) -> dict[str, FleetResult]:
+    """Fleet counterpart of :func:`repro.core.simulator.run_schemes`."""
+
+    batch = trace if isinstance(trace, TraceBatch) else TraceBatch.from_items(trace)
+    return {
+        s: FleetSimulator(
+            num_nodes=num_nodes, scheme=s, policy=policy, **kwargs
+        ).run(batch)
+        for s in schemes
+    }

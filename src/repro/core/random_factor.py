@@ -122,6 +122,75 @@ def random_percentage_batch(offsets, sizes):
     return s.astype(jnp.float32) / max(n - 1, 1)
 
 
+def seek_distance_batch(offsets, sizes):
+    """Batched sorted seek distance: ``(M, N) -> (M,)`` on device.
+
+    Same definition as :func:`sorted_seek_distance` — total |gap - size|
+    over sorted-adjacent pairs; see :func:`stream_stats_batch` for the
+    dtype caveats.
+    """
+
+    return stream_stats_batch(offsets, sizes)[2]
+
+
+def stream_stats_batch(offsets, sizes):
+    """All three per-stream statistics in one device call.
+
+    ``(M, N)`` offsets/sizes -> ``(rf_sum (M,), percentage (M,),
+    seek_distance (M,))``.  One sort feeds both the Eq. 1 seek count and
+    the seek-distance aggregate; this is the jnp oracle for the
+    ``stream_rf`` Pallas kernel and the device fast path behind
+    :func:`repro.core.trace.compute_stream_scores`.
+
+    Dtypes: offsets/sizes ride int32 lanes (jax's default integer width
+    here), so per-request values must fit below 2 GiB; the seek-distance
+    *sum* can exceed int32 even then (127 residuals of up to 2 GiB), so
+    it is accumulated in float32 — overflow-safe, with ~1e-7 relative
+    rounding above 16 MiB totals (irrelevant to the timing model, which
+    multiplies by seconds-per-byte).  The host path
+    (:func:`stream_stats_batch_np`) is the full-range int64 exact oracle.
+    """
+
+    offs = jnp.asarray(offsets, dtype=jnp.int32)
+    szs = jnp.broadcast_to(jnp.asarray(sizes, dtype=jnp.int32), offs.shape)
+    n = offs.shape[-1]
+    order = jnp.argsort(offs, axis=-1, stable=True)
+    so = jnp.take_along_axis(offs, order, axis=-1)
+    ss = jnp.take_along_axis(szs, order, axis=-1)
+    resid = so[..., 1:] - so[..., :-1] - ss[..., :-1]
+    rf = jnp.sum((resid != 0).astype(jnp.int32), axis=-1)
+    pct = rf.astype(jnp.float32) / max(n - 1, 1)
+    dist = jnp.sum(jnp.abs(resid).astype(jnp.float32), axis=-1)
+    return rf, pct, dist
+
+
+def stream_stats_batch_np(offsets, sizes):
+    """Vectorized host-side scoring of many streams at once (int64, exact).
+
+    ``(M, N)`` -> ``(rf_sum int64, percentage float64, seek_distance
+    int64)``, each ``(M,)``.  Bit-for-bit equal to looping the scalar
+    :func:`random_factor_sum` / :func:`random_percentage` /
+    :func:`sorted_seek_distance` over the rows — the fleet simulator's
+    default scoring path and the correctness oracle for the device
+    backends.
+    """
+
+    offs = np.asarray(offsets, dtype=np.int64)
+    szs = np.broadcast_to(np.asarray(sizes, dtype=np.int64), offs.shape)
+    m, n = offs.shape
+    if n <= 1:
+        z = np.zeros(m, dtype=np.int64)
+        return z, np.zeros(m, dtype=np.float64), z.copy()
+    order = np.argsort(offs, axis=-1, kind="stable")
+    so = np.take_along_axis(offs, order, axis=-1)
+    ss = np.take_along_axis(szs, order, axis=-1)
+    resid = so[:, 1:] - so[:, :-1] - ss[:, :-1]
+    rf = np.count_nonzero(resid, axis=-1).astype(np.int64)
+    pct = rf / (n - 1)
+    dist = np.abs(resid).sum(axis=-1)
+    return rf, pct, dist
+
+
 class StreamGrouper:
     """Groups an arriving request sequence into fixed-length streams.
 

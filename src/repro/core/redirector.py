@@ -72,13 +72,20 @@ class DataRedirector:
         self.decisions: list[tuple[float, float, Device]] = []  # (pct, thr, dev)
 
     # ------------------------------------------------------------------
-    def route_stream(self, stream: Sequence[Request]) -> RoutedStream:
-        """Route one complete stream; updates the policy and device state."""
+    def route_stream(
+        self, stream: Sequence[Request], percentage: float | None = None
+    ) -> RoutedStream:
+        """Route one complete stream; updates the policy and device state.
+
+        ``percentage`` lets a caller that already scored the stream (e.g.
+        the simulator replaying with precomputed batched scores) skip the
+        per-stream sort here; it must equal ``stream_percentage(stream)``.
+        """
 
         # The device for THIS stream was decided by the previous stream
         # (Algorithm 1's "send requests of next stream to ...").
         device = self.current_device
-        pct = stream_percentage(stream)
+        pct = stream_percentage(stream) if percentage is None else percentage
         threshold_in_effect = self.policy.threshold
         self.policy.observe(pct)
 

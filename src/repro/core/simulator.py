@@ -48,16 +48,7 @@ from .random_factor import (
     stream_percentage,
 )
 from .redirector import DataRedirector, Device
-
-
-@dataclasses.dataclass(frozen=True, slots=True)
-class Gap:
-    """A compute phase between I/O phases (no foreground I/O)."""
-
-    seconds: float
-
-
-TraceItem = Request | Gap
+from .trace import Gap, StreamScores, TraceItem
 
 
 @dataclasses.dataclass
@@ -138,15 +129,36 @@ class IONodeSimulator:
             self.redirector = None
 
     # ------------------------------------------------------------------
-    def _hdd_stream_time(self, stream: Sequence[Request]) -> float:
-        offs = [r.offset for r in stream]
-        szs = [r.size for r in stream]
-        nbytes = sum(szs)
-        seeks = random_factor_sum(offs, szs)
-        dist = sorted_seek_distance(stream)
+    def _hdd_stream_time(
+        self,
+        stream: Sequence[Request],
+        seeks: int | None = None,
+        dist: int | None = None,
+    ) -> float:
+        nbytes = sum(r.size for r in stream)
+        if seeks is None:
+            offs = [r.offset for r in stream]
+            szs = [r.size for r in stream]
+            seeks = random_factor_sum(offs, szs)
+        if dist is None:
+            dist = sorted_seek_distance(stream)
         return self.hdd.write_time(nbytes, seeks, dist)
 
-    def run(self, trace: Sequence[TraceItem]) -> SimResult:
+    def run(
+        self,
+        trace: Sequence[TraceItem],
+        scores: StreamScores | None = None,
+    ) -> SimResult:
+        """Replay ``trace``; ``scores`` (from
+        :func:`repro.core.trace.compute_stream_scores`, same ``stream_len``)
+        supplies every stream's random percentage / seek count / seek
+        distance so the hot loop never re-sorts a stream on the host."""
+
+        if scores is not None and scores.stream_len != self.stream_len:
+            raise ValueError(
+                f"scores computed for stream_len={scores.stream_len}, "
+                f"simulator uses {self.stream_len}"
+            )
         clock = 0.0
         gap_seconds = 0.0
         bytes_ssd = 0
@@ -195,15 +207,37 @@ class IONodeSimulator:
             clock += dt
             return dt
 
+        stream_idx = 0
+
         def handle_stream(stream: list[Request]) -> None:
-            nonlocal bytes_ssd, bytes_hdd, peak_ssd, blocked_seconds
-            pct = stream_percentage(stream)
+            nonlocal bytes_ssd, bytes_hdd, peak_ssd, blocked_seconds, stream_idx
+            idx = stream_idx
+            stream_idx += 1
+            seeks: int | None = None
+            dist: int | None = None
             nbytes = sum(r.size for r in stream)
+            if scores is not None:
+                if (
+                    idx >= len(scores)
+                    or int(scores.nbytes[idx]) != nbytes
+                    or int(scores.offset_sum[idx])
+                    != sum(r.offset for r in stream)
+                ):
+                    raise ValueError(
+                        f"stream {idx} does not match the precomputed scores "
+                        "(wrong trace or stream grouping?)"
+                    )
+                pct = float(scores.percentage[idx])
+                seeks = int(scores.rf_sum[idx])
+                dist = int(scores.seek_distance[idx])
+            else:
+                pct = stream_percentage(stream)
             for r in stream:
                 per_app[r.app_id] = per_app.get(r.app_id, 0) + r.size
 
             if self.scheme == "orangefs":
-                advance(self._hdd_stream_time(stream), nbytes, hdd_foreground=True)
+                advance(self._hdd_stream_time(stream, seeks, dist), nbytes,
+                        hdd_foreground=True)
                 bytes_hdd += nbytes
                 self._last_pct = pct
                 return
@@ -212,7 +246,7 @@ class IONodeSimulator:
                 device = Device.SSD  # plain BB caches everything it can
             else:
                 assert self.redirector is not None
-                routed = self.redirector.route_stream(stream)
+                routed = self.redirector.route_stream(stream, percentage=pct)
                 device = routed.device
             self._last_pct = pct
 
@@ -235,12 +269,15 @@ class IONodeSimulator:
                     advance(self.ssd.write_time(r.size), r.size, hdd_foreground=False)
                     bytes_ssd += r.size
                 if overflow:
+                    # overflow is a subset of the stream — no precomputed
+                    # score exists for it, so fall back to scalar scoring
                     ob = sum(r.size for r in overflow)
                     advance(self._hdd_stream_time(overflow), ob, hdd_foreground=True)
                     bytes_hdd += ob
                 peak_ssd = max(peak_ssd, self.pipeline.buffered_bytes)
             else:
-                advance(self._hdd_stream_time(stream), nbytes, hdd_foreground=True)
+                advance(self._hdd_stream_time(stream, seeks, dist), nbytes,
+                        hdd_foreground=True)
                 bytes_hdd += nbytes
 
         # -- main loop ----------------------------------------------------
@@ -258,6 +295,11 @@ class IONodeSimulator:
         tail = grouper.flush()
         if tail is not None:
             handle_stream(tail)
+        if scores is not None and stream_idx != len(scores):
+            raise ValueError(
+                f"precomputed scores cover {len(scores)} streams but the "
+                f"trace produced {stream_idx} (wrong trace?)"
+            )
 
         io_seconds = clock - gap_seconds  # application-visible I/O time
 
@@ -293,8 +335,17 @@ class IONodeSimulator:
 def run_schemes(
     trace: Sequence[TraceItem],
     schemes: Iterable[str] = ("orangefs", "orangefs-bb", "ssdup", "ssdup+"),
+    scores: StreamScores | None = None,
     **kwargs,
 ) -> dict[str, SimResult]:
-    """Run the same trace under several schemes (paper's comparison set)."""
+    """Run the same trace under several schemes (paper's comparison set).
 
-    return {s: IONodeSimulator(scheme=s, **kwargs).run(list(trace)) for s in schemes}
+    ``scores`` precomputed once (they are scheme-independent) is reused
+    across every scheme's replay.
+    """
+
+    trace = list(trace)
+    return {
+        s: IONodeSimulator(scheme=s, **kwargs).run(trace, scores=scores)
+        for s in schemes
+    }

@@ -1,0 +1,347 @@
+"""Struct-of-arrays trace representation + batched per-stream scoring.
+
+The seed simulator consumed a Python ``list[Request | Gap]`` and re-scored
+every 128-request stream with per-stream NumPy calls (argsort + reductions
+inside a Python loop).  This module is the columnar counterpart used by the
+fleet layer (:mod:`repro.core.fleet`):
+
+* :class:`TraceBatch` — one trace as parallel ``int64``/``float64`` arrays
+  (offset, size, file_id, app_id, time) plus *gap markers*: compute phases
+  (:class:`Gap`) are stored out-of-band as ``(position, seconds)`` pairs
+  where ``position`` is the request index the gap precedes.  Converts
+  losslessly to/from the simulator's item lists.
+* :class:`StreamScores` — the three per-stream statistics the simulator
+  needs (Eq. 1 random-factor sum, random percentage, sorted seek distance),
+  precomputed for *all* streams of a trace in one vectorized call so
+  :meth:`repro.core.simulator.IONodeSimulator.run` never re-sorts a stream
+  in its hot loop.
+* :func:`compute_stream_scores` — scoring entry point with three backends:
+  ``numpy`` (vectorized ``int64`` host math, bit-exact against the scalar
+  definitions — the default and the oracle), ``jnp`` (one device call via
+  :func:`repro.core.random_factor.stream_stats_batch`), and ``pallas``
+  (the ``repro.kernels.stream_rf`` TPU kernel as the random-factor fast
+  path).  Device backends use ``int32`` lanes (offsets must fit below
+  2 GiB; the seek-distance sum is float32-accumulated — see
+  :func:`repro.core.random_factor.stream_stats_batch`) and fall back to
+  ``numpy`` automatically when jax is absent.
+
+Stream grouping follows :class:`repro.core.random_factor.StreamGrouper`
+semantics exactly: requests are blocked in arrival order into windows of
+``stream_len``; gaps do NOT flush a partial window; a trailing partial
+stream is scored on the host (device kernels want the fixed power-of-two
+window).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .random_factor import DEFAULT_STREAM_LEN, Request, stream_stats_batch_np
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class Gap:
+    """A compute phase between I/O phases (no foreground I/O)."""
+
+    seconds: float
+
+
+TraceItem = Request | Gap
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # ndarray fields: generated
+class TraceBatch:                               # __eq__ would raise
+    """A request trace in struct-of-arrays form (+ out-of-band gap markers).
+
+    ``gap_positions[i]`` is the index of the request that gap ``i``
+    *precedes* (``num_requests`` means "after the last request"); positions
+    are non-decreasing.  Several gaps may share a position.
+    """
+
+    offsets: np.ndarray  # (R,) int64
+    sizes: np.ndarray  # (R,) int64
+    file_ids: np.ndarray  # (R,) int64
+    app_ids: np.ndarray  # (R,) int64
+    times: np.ndarray  # (R,) float64
+    gap_positions: np.ndarray  # (G,) int64, non-decreasing, in [0, R]
+    gap_seconds: np.ndarray  # (G,) float64
+
+    def __post_init__(self):
+        r = self.offsets.shape[0]
+        for name in ("sizes", "file_ids", "app_ids", "times"):
+            arr = getattr(self, name)
+            if arr.shape[0] != r:
+                raise ValueError(f"{name} length {arr.shape[0]} != offsets length {r}")
+        g = self.gap_positions.shape[0]
+        if self.gap_seconds.shape[0] != g:
+            raise ValueError("gap_positions / gap_seconds length mismatch")
+        if g and (np.any(self.gap_positions < 0) or np.any(self.gap_positions > r)):
+            raise ValueError("gap position out of range")
+
+    # -- constructors ---------------------------------------------------
+    @classmethod
+    def from_items(cls, items: Iterable[TraceItem]) -> "TraceBatch":
+        """Build from the simulator's mixed ``Request | Gap`` sequence."""
+
+        offs: list[int] = []
+        szs: list[int] = []
+        fids: list[int] = []
+        aids: list[int] = []
+        tms: list[float] = []
+        gpos: list[int] = []
+        gsec: list[float] = []
+        for item in items:
+            if isinstance(item, Gap):
+                gpos.append(len(offs))
+                gsec.append(item.seconds)
+                continue
+            offs.append(item.offset)
+            szs.append(item.size)
+            fids.append(item.file_id)
+            aids.append(item.app_id)
+            tms.append(item.time)
+        return cls(
+            offsets=np.asarray(offs, dtype=np.int64),
+            sizes=np.asarray(szs, dtype=np.int64),
+            file_ids=np.asarray(fids, dtype=np.int64),
+            app_ids=np.asarray(aids, dtype=np.int64),
+            times=np.asarray(tms, dtype=np.float64),
+            gap_positions=np.asarray(gpos, dtype=np.int64),
+            gap_seconds=np.asarray(gsec, dtype=np.float64),
+        )
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[Request]) -> "TraceBatch":
+        """Build from a gap-free request sequence (e.g. ``Workload.trace``)."""
+
+        return cls.from_items(requests)
+
+    # -- converters -----------------------------------------------------
+    def to_items(self) -> list[TraceItem]:
+        """Round-trip back to the simulator's item list (gaps in place)."""
+
+        out: list[TraceItem] = []
+        gi = 0
+        ng = len(self.gap_positions)
+        for i in range(self.num_requests):
+            while gi < ng and self.gap_positions[gi] == i:
+                out.append(Gap(float(self.gap_seconds[gi])))
+                gi += 1
+            out.append(
+                Request(
+                    offset=int(self.offsets[i]),
+                    size=int(self.sizes[i]),
+                    file_id=int(self.file_ids[i]),
+                    app_id=int(self.app_ids[i]),
+                    time=float(self.times[i]),
+                )
+            )
+        while gi < ng:
+            out.append(Gap(float(self.gap_seconds[gi])))
+            gi += 1
+        return out
+
+    def to_requests(self) -> list[Request]:
+        """Requests only (gap markers dropped)."""
+
+        return [r for r in self.to_items() if isinstance(r, Request)]
+
+    # -- basic queries --------------------------------------------------
+    @property
+    def num_requests(self) -> int:
+        return int(self.offsets.shape[0])
+
+    @property
+    def num_gaps(self) -> int:
+        return int(self.gap_positions.shape[0])
+
+    @property
+    def total_bytes(self) -> int:
+        return int(self.sizes.sum())
+
+    @property
+    def gap_seconds_total(self) -> float:
+        return float(self.gap_seconds.sum())
+
+    def num_streams(self, stream_len: int = DEFAULT_STREAM_LEN) -> int:
+        return -(-self.num_requests // stream_len) if self.num_requests else 0
+
+    # -- slicing / sharding --------------------------------------------
+    def select(self, indices: np.ndarray) -> "TraceBatch":
+        """Sub-trace of the requests at ``indices`` (must be sorted).
+
+        Gap markers are *replicated* into every selection — a compute phase
+        idles the whole fleet, not one shard — with positions remapped to
+        the local request indexing.
+        """
+
+        idx = np.asarray(indices, dtype=np.int64)
+        if idx.size > 1 and np.any(np.diff(idx) < 0):
+            raise ValueError("selection indices must be sorted (arrival order)")
+        return TraceBatch(
+            offsets=self.offsets[idx],
+            sizes=self.sizes[idx],
+            file_ids=self.file_ids[idx],
+            app_ids=self.app_ids[idx],
+            times=self.times[idx],
+            # local position = how many selected requests precede the gap
+            gap_positions=np.searchsorted(idx, self.gap_positions, side="left"),
+            gap_seconds=self.gap_seconds.copy(),
+        )
+
+    def shard(self, assignment: np.ndarray, num_nodes: int) -> list["TraceBatch"]:
+        """Split by a per-request node assignment into ``num_nodes`` batches."""
+
+        assignment = np.asarray(assignment)
+        if assignment.shape[0] != self.num_requests:
+            raise ValueError("assignment length != num_requests")
+        if assignment.size and (assignment.min() < 0 or assignment.max() >= num_nodes):
+            raise ValueError("node assignment out of range")
+        return [
+            self.select(np.nonzero(assignment == node)[0])
+            for node in range(num_nodes)
+        ]
+
+    # -- stream view ----------------------------------------------------
+    def stream_matrix(
+        self, stream_len: int = DEFAULT_STREAM_LEN
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """``(offsets (M, L), sizes (M, L), tail_offsets, tail_sizes)``.
+
+        M full streams in arrival order plus the (possibly empty) trailing
+        partial stream, matching :class:`StreamGrouper` emission order.
+        """
+
+        r = self.num_requests
+        m = r // stream_len
+        full = m * stream_len
+        return (
+            self.offsets[:full].reshape(m, stream_len),
+            self.sizes[:full].reshape(m, stream_len),
+            self.offsets[full:],
+            self.sizes[full:],
+        )
+
+
+# ---------------------------------------------------------------------------
+# batched per-stream scoring
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)  # ndarray fields: generated
+class StreamScores:                             # __eq__ would raise
+    """Per-stream statistics in stream-emission order.
+
+    One row per stream (full windows first, trailing partial last):
+    Eq. 1 random-factor sum, random percentage ``S/(N-1)``, total sorted
+    seek distance, the stream's byte count, and an offset checksum
+    (plain sum) the simulator uses to reject scores that were computed
+    for a different trace.
+    """
+
+    rf_sum: np.ndarray  # (S,) int64
+    percentage: np.ndarray  # (S,) float64
+    seek_distance: np.ndarray  # (S,) int64
+    nbytes: np.ndarray  # (S,) int64
+    offset_sum: np.ndarray  # (S,) int64
+    stream_len: int
+    backend: str
+
+    def __len__(self) -> int:
+        return int(self.rf_sum.shape[0])
+
+
+SCORE_BACKENDS = ("numpy", "jnp", "pallas")
+
+
+_INT32_MAX = np.int64(2**31 - 1)
+
+
+def _score_full_streams_device(
+    offs2d: np.ndarray, szs2d: np.ndarray, backend: str
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Score the (M, L) full-stream block on device; int32 lanes."""
+
+    from . import random_factor as rf_mod
+
+    if (
+        rf_mod.jnp is None  # jax absent: take the exact host path
+        # int32 lanes would truncate large offsets into WRONG scores (not
+        # just imprecise ones); paper-scale volumes exceed 2 GiB offsets,
+        # so route those to the exact host path too
+        or np.abs(offs2d).max(initial=0) > _INT32_MAX
+        or szs2d.max(initial=0) > _INT32_MAX
+    ):
+        rf, pct, dist = stream_stats_batch_np(offs2d, szs2d)
+        return rf, pct, dist
+    if backend == "pallas":
+        from repro.kernels.stream_rf.ops import stream_stats_op
+
+        rf, pct, dist = stream_stats_op(offs2d, szs2d)
+    else:
+        rf, pct, dist = rf_mod.stream_stats_batch(offs2d, szs2d)
+    return (
+        np.asarray(rf, dtype=np.int64),
+        np.asarray(pct, dtype=np.float64),
+        # device backends accumulate the distance in float32 (int32 would
+        # wrap); round back to the integer byte count
+        np.rint(np.asarray(dist, dtype=np.float64)).astype(np.int64),
+    )
+
+
+def compute_stream_scores(
+    trace: "TraceBatch | Sequence[TraceItem]",
+    stream_len: int = DEFAULT_STREAM_LEN,
+    backend: str = "numpy",
+) -> StreamScores:
+    """Score every stream of a trace in one vectorized pass.
+
+    ``backend="numpy"`` (default) is bit-exact against the scalar
+    ``stream_percentage`` / ``sorted_seek_distance`` path and needs no
+    accelerator.  ``"jnp"`` runs the whole block as one device call;
+    ``"pallas"`` additionally routes the random-factor sum through the
+    ``stream_rf`` bitonic-sort kernel (requires power-of-two
+    ``stream_len``).  The trailing partial stream is always scored on the
+    host.
+    """
+
+    if backend not in SCORE_BACKENDS:
+        raise ValueError(f"backend must be one of {SCORE_BACKENDS}, got {backend!r}")
+    batch = trace if isinstance(trace, TraceBatch) else TraceBatch.from_items(trace)
+    offs2d, szs2d, tail_offs, tail_szs = batch.stream_matrix(stream_len)
+
+    if offs2d.shape[0]:
+        if backend == "numpy":
+            rf, pct, dist = stream_stats_batch_np(offs2d, szs2d)
+        else:
+            rf, pct, dist = _score_full_streams_device(offs2d, szs2d, backend)
+        nbytes = szs2d.sum(axis=1)
+        osum = offs2d.sum(axis=1)
+    else:
+        rf = np.zeros(0, dtype=np.int64)
+        pct = np.zeros(0, dtype=np.float64)
+        dist = np.zeros(0, dtype=np.int64)
+        nbytes = np.zeros(0, dtype=np.int64)
+        osum = np.zeros(0, dtype=np.int64)
+
+    if tail_offs.size:
+        trf, tpct, tdist = stream_stats_batch_np(
+            tail_offs[None, :], tail_szs[None, :]
+        )
+        rf = np.concatenate([rf, trf])
+        pct = np.concatenate([pct, tpct])
+        dist = np.concatenate([dist, tdist])
+        nbytes = np.concatenate([nbytes, [int(tail_szs.sum())]])
+        osum = np.concatenate([osum, [int(tail_offs.sum())]])
+
+    return StreamScores(
+        rf_sum=rf,
+        percentage=pct,
+        seek_distance=dist,
+        nbytes=np.asarray(nbytes, dtype=np.int64),
+        offset_sum=np.asarray(osum, dtype=np.int64),
+        stream_len=stream_len,
+        backend=backend,
+    )

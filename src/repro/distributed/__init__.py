@@ -2,8 +2,13 @@
 
 from repro.distributed.sharding import (
     DEFAULT_RULES,
+    TRACE_POLICIES,
+    assign_nodes,
     constrain,
     named_sharding,
+    shard_hash_file,
+    shard_range_offset,
+    shard_round_robin_app,
     spec_for,
     tree_shardings,
     use_mesh,
@@ -11,8 +16,13 @@ from repro.distributed.sharding import (
 
 __all__ = [
     "DEFAULT_RULES",
+    "TRACE_POLICIES",
+    "assign_nodes",
     "constrain",
     "named_sharding",
+    "shard_hash_file",
+    "shard_range_offset",
+    "shard_round_robin_app",
     "spec_for",
     "tree_shardings",
     "use_mesh",

@@ -1,4 +1,26 @@
-"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP on one rule table).
+"""Sharding: logical-axis rules for tensors + trace partitioning for traces.
+
+Two layers live here:
+
+1. **Tensor sharding** — logical-axis rules mapping weights/activations onto
+   the active mesh (DP / FSDP / TP / EP / SP on one rule table), below.
+2. **Trace sharding** — request-level partitioning policies that split one
+   server-side arrival trace across N I/O nodes for the fleet simulator
+   (:mod:`repro.core.fleet`).  These mirror how a parallel file system
+   actually distributes clients over I/O servers:
+
+   * ``round-robin-app``   — whole applications pinned to nodes round-robin
+     (OrangeFS-style server assignment per client group; keeps each app's
+     access pattern intact on its node).
+   * ``hash-file``         — files hashed to nodes (object/handle hashing;
+     different files never share a node's queue).
+   * ``range-offset``      — the global byte range striped into N equal
+     extents (Lustre-style range partitioning; one file's traffic spreads
+     over all nodes).
+
+   Policy functions are pure array transforms ``(offsets, file_ids,
+   app_ids, num_nodes) -> node assignment`` so they stay import-light (no
+   dependency on :mod:`repro.core`).
 
 Weights and activations are annotated with *logical* axis names; this module
 maps them onto the active mesh.  The mapping enforces divisibility: a logical
@@ -33,8 +55,13 @@ import contextlib
 import threading
 from typing import Any, Iterable, Sequence
 
-import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+try:  # the trace-sharding policies below are numpy-only; keep the module
+    # (and therefore repro.core.fleet / repro.core) importable without jax
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+except Exception:  # pragma: no cover - jax is installed in this repo
+    jax = None
+    Mesh = NamedSharding = P = None  # tensor-sharding API unusable
 
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
@@ -159,3 +186,91 @@ def tree_shardings(abstract_tree, logical_tree, mesh: Mesh | None = None):
         return named_sharding(a.shape, l, mesh)
 
     return rec(abstract_tree, logical_tree)
+
+
+# ---------------------------------------------------------------------------
+# trace sharding: request -> I/O node assignment (fleet simulator)
+# ---------------------------------------------------------------------------
+
+import numpy as np  # noqa: E402  (trace policies are NumPy-only)
+
+
+def shard_round_robin_app(offsets, file_ids, app_ids, num_nodes: int) -> np.ndarray:
+    """Pin whole applications to nodes round-robin (by first appearance).
+
+    Every request of one app lands on one node, so the app's access
+    pattern — and therefore its random percentage — survives sharding
+    unchanged.  Apps are ranked by first appearance in the arrival order,
+    making the assignment deterministic for a given trace.
+    """
+
+    app_ids = np.asarray(app_ids, dtype=np.int64)
+    _, first_pos, inverse = np.unique(app_ids, return_index=True,
+                                      return_inverse=True)
+    # rank apps by arrival (np.unique sorts by id; re-rank by first_pos)
+    rank_of_sorted = np.argsort(np.argsort(first_pos, kind="stable"),
+                                kind="stable")
+    return (rank_of_sorted[inverse] % num_nodes).astype(np.int64)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Deterministic 64-bit mix (SplitMix64 finalizer), vectorized."""
+
+    z = x.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def shard_hash_file(offsets, file_ids, app_ids, num_nodes: int) -> np.ndarray:
+    """Hash each file handle to a node (object-store / handle hashing)."""
+
+    file_ids = np.asarray(file_ids, dtype=np.int64)
+    return (_splitmix64(file_ids) % np.uint64(num_nodes)).astype(np.int64)
+
+
+def shard_range_offset(offsets, file_ids, app_ids, num_nodes: int) -> np.ndarray:
+    """Stripe the global logical byte range into ``num_nodes`` equal extents.
+
+    Request at offset ``o`` goes to ``(o - lo) // extent`` where the
+    ``[lo, hi]`` span is taken over the whole trace — Lustre-style range
+    partitioning.  Spreads one hot file across every node at the cost of
+    splitting sequential runs at extent boundaries.
+    """
+
+    offsets = np.asarray(offsets, dtype=np.int64)
+    if offsets.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    lo = int(offsets.min())
+    hi = int(offsets.max())
+    extent = max((hi - lo) // num_nodes + 1, 1)
+    return np.minimum((offsets - lo) // extent, num_nodes - 1).astype(np.int64)
+
+
+TRACE_POLICIES = {
+    "round-robin-app": shard_round_robin_app,
+    "hash-file": shard_hash_file,
+    "range-offset": shard_range_offset,
+}
+
+
+def assign_nodes(policy: str, offsets, file_ids, app_ids,
+                 num_nodes: int) -> np.ndarray:
+    """Per-request node assignment under a named trace-sharding policy."""
+
+    if num_nodes < 1:
+        raise ValueError(f"num_nodes must be >= 1, got {num_nodes}")
+    try:
+        fn = TRACE_POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown trace sharding policy {policy!r}; "
+            f"choose from {sorted(TRACE_POLICIES)}"
+        ) from None
+    out = fn(offsets, file_ids, app_ids, num_nodes)
+    if out.shape[0] != np.asarray(offsets).shape[0]:
+        raise ValueError(
+            f"policy {policy!r} returned {out.shape[0]} assignments for "
+            f"{np.asarray(offsets).shape[0]} requests"
+        )
+    return out

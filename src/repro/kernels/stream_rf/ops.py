@@ -31,3 +31,26 @@ def random_percentage_op(offsets, sizes, **kw) -> jax.Array:
     n = offsets.shape[-1]
     s = stream_rf_op(offsets, sizes, **kw)
     return s.astype(jnp.float32) / max(n - 1, 1)
+
+
+def stream_stats_op(offsets, sizes, **kw) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Kernel-backed per-stream stats: ``(M, N) -> (rf, pct, dist)``.
+
+    The Eq. 1 seek count comes from the bitonic-sort Pallas kernel; the
+    seek-distance aggregate (which the kernel does not emit) is one extra
+    sorted-residual reduction in plain jnp, accumulated in float32 so it
+    cannot wrap int32 (see ``stream_stats_batch``'s dtype notes).  Matches
+    ``repro.core.random_factor.stream_stats_batch`` elementwise.
+    """
+
+    offsets = jnp.asarray(offsets, jnp.int32)
+    szs = jnp.broadcast_to(jnp.asarray(sizes, jnp.int32), offsets.shape)
+    n = offsets.shape[-1]
+    rf = stream_rf_op(offsets, szs, **kw)
+    pct = rf.astype(jnp.float32) / max(n - 1, 1)
+    order = jnp.argsort(offsets, axis=-1, stable=True)
+    so = jnp.take_along_axis(offsets, order, axis=-1)
+    ss = jnp.take_along_axis(szs, order, axis=-1)
+    resid = so[..., 1:] - so[..., :-1] - ss[..., :-1]
+    dist = jnp.sum(jnp.abs(resid).astype(jnp.float32), axis=-1)
+    return rf, pct, dist

@@ -22,11 +22,12 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {ndev} devices for mesh {shape}, have {len(devices)} — "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
         )
+    # jax.sharding.AxisType and make_mesh's kwargs vary across jax versions;
+    # evaluate the optional pieces defensively.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kw = {"axis_types": (axis_type.Auto,) * len(axes)} if axis_type else {}
     try:
-        return jax.make_mesh(
-            shape, axes, devices=devices[:ndev],
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        )
+        return jax.make_mesh(shape, axes, devices=devices[:ndev], **kw)
     except TypeError:  # older jax without the devices kwarg
         from jax.sharding import Mesh
 
@@ -40,7 +41,6 @@ def make_host_mesh(model_axis: int = 1):
 
     n = len(jax.devices())
     data = n // model_axis
-    return jax.make_mesh(
-        (data, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kw = {"axis_types": (axis_type.Auto,) * 2} if axis_type else {}
+    return jax.make_mesh((data, model_axis), ("data", "model"), **kw)

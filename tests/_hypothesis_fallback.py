@@ -1,0 +1,97 @@
+"""Minimal stand-in for the hypothesis API surface these tests use.
+
+When the real ``hypothesis`` package is installed (see
+``requirements-dev.txt``) the test modules import it directly and get full
+shrinking/replay behaviour.  Where it is absent, this fallback keeps the
+property tests *running* instead of skipping: ``@given`` draws
+``max_examples`` pseudo-random examples from a deterministic per-test seed
+(stable across runs, so failures are reproducible) with no shrinking.
+
+Only the strategies the suite uses are provided: ``integers``, ``floats``,
+``booleans``, ``sampled_from``, ``tuples``, ``lists``.
+"""
+
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """Wraps ``sample(rng) -> value``."""
+
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class _St:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1))
+        )
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    @staticmethod
+    def tuples(*strategies: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(n)]
+
+        return _Strategy(sample)
+
+
+st = _St()
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Accepts (and mostly ignores) hypothesis settings kwargs."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Draw N examples per test from a per-test deterministic seed."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.sample(rng) for s in arg_strategies]
+                drawn_kw = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+
+        # pytest follows __wrapped__ to the original signature and would
+        # mistake the strategy parameters for fixtures; hide it.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

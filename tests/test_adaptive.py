@@ -1,8 +1,12 @@
 """Tests for the adaptive threshold (paper Eq. 2/3, Section 2.3.2)."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic no-shrink fallback, same API surface
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import AdaptiveThreshold, StaticWatermarkThreshold
 

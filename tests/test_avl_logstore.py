@@ -1,8 +1,12 @@
 """AVL tree + log store tests (paper Section 2.5), incl. hypothesis invariants."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic no-shrink fallback, same API surface
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import AVLTree, LogRegion, RegionFullError
 from repro.core.avl import NODE_BYTES

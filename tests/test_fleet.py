@@ -1,0 +1,222 @@
+"""Fleet simulator: N=1 equivalence, sharding conservation, scaling."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FleetSimulator,
+    IONodeSimulator,
+    TraceBatch,
+    compute_stream_scores,
+    ior,
+    mixed,
+    relabel,
+    run_fleet_schemes,
+)
+from repro.core.workloads import MiB
+from repro.distributed.sharding import TRACE_POLICIES, assign_nodes
+
+SMALL = 128 * MiB
+
+
+@pytest.fixture(scope="module")
+def mixed_load():
+    w1 = relabel(ior("segmented-contiguous", 8, total_bytes=SMALL, seed=1),
+                 app_id=0, file_id=0)
+    w2 = relabel(ior("segmented-random", 8, total_bytes=SMALL, seed=2),
+                 app_id=1, file_id=1)
+    w3 = relabel(ior("strided", 16, total_bytes=SMALL, seed=3),
+                 app_id=2, file_id=2)
+    return mixed(w1, w2, w3, burst_requests=256)
+
+
+class TestSingleNodeEquivalence:
+    """A 1-node fleet must reproduce IONodeSimulator exactly."""
+
+    @pytest.mark.parametrize("scheme", ["orangefs", "orangefs-bb", "ssdup",
+                                        "ssdup+"])
+    @pytest.mark.parametrize("policy", ["round-robin-app", "hash-file"])
+    def test_byte_accounting_bit_for_bit(self, mixed_load, scheme, policy):
+        trace = list(mixed_load.trace)
+        cap = mixed_load.total_bytes // 2
+        single = IONodeSimulator(scheme=scheme, ssd_capacity=cap).run(trace)
+        fleet = FleetSimulator(num_nodes=1, scheme=scheme, policy=policy,
+                               ssd_capacity=cap).run(trace)
+        node = fleet.node_results[0]
+        assert node.total_bytes == single.total_bytes
+        assert node.bytes_to_ssd == single.bytes_to_ssd
+        assert node.bytes_to_hdd_direct == single.bytes_to_hdd_direct
+        assert node.flushes == single.flushes
+        assert node.peak_ssd_occupancy == single.peak_ssd_occupancy
+        assert node.io_seconds == pytest.approx(single.io_seconds, rel=1e-12)
+        assert node.total_seconds == pytest.approx(single.total_seconds,
+                                                   rel=1e-12)
+
+    def test_precomputed_scores_match_scalar_path(self, mixed_load):
+        """run() with scores must equal run() without, byte for byte."""
+
+        trace = list(mixed_load.trace)
+        cap = mixed_load.total_bytes // 2
+        scores = compute_stream_scores(trace)
+        a = IONodeSimulator(scheme="ssdup+", ssd_capacity=cap).run(trace)
+        b = IONodeSimulator(scheme="ssdup+", ssd_capacity=cap).run(
+            trace, scores=scores)
+        assert a.bytes_to_ssd == b.bytes_to_ssd
+        assert a.bytes_to_hdd_direct == b.bytes_to_hdd_direct
+        assert a.io_seconds == b.io_seconds
+        assert a.total_seconds == b.total_seconds
+
+    def test_stream_len_mismatch_rejected(self, mixed_load):
+        trace = list(mixed_load.trace)
+        scores = compute_stream_scores(trace, stream_len=64)
+        with pytest.raises(ValueError, match="stream_len"):
+            IONodeSimulator(scheme="ssdup+").run(trace, scores=scores)
+
+    def test_wrong_trace_scores_rejected(self, mixed_load):
+        """Scores precomputed for a different trace must not be applied."""
+
+        trace = list(mixed_load.trace)
+        other = ior("segmented-random", 8, total_bytes=SMALL, seed=99)
+        wrong = compute_stream_scores(list(other.trace))
+        with pytest.raises(ValueError, match="scores"):
+            IONodeSimulator(scheme="ssdup+").run(trace, scores=wrong)
+        # truncated scores (fewer streams than the trace) also rejected
+        short = compute_stream_scores(trace[:128])
+        with pytest.raises(ValueError, match="scores"):
+            IONodeSimulator(scheme="ssdup+").run(trace, scores=short)
+
+
+class TestShardingPolicies:
+    @pytest.mark.parametrize("policy", sorted(TRACE_POLICIES))
+    @pytest.mark.parametrize("num_nodes", [1, 2, 5, 16])
+    def test_partition_without_loss(self, mixed_load, policy, num_nodes):
+        batch = TraceBatch.from_requests(mixed_load.trace)
+        assignment = assign_nodes(policy, batch.offsets, batch.file_ids,
+                                  batch.app_ids, num_nodes)
+        assert assignment.shape == (batch.num_requests,)
+        assert assignment.min() >= 0 and assignment.max() < num_nodes
+        shards = batch.shard(assignment, num_nodes)
+        assert sum(s.num_requests for s in shards) == batch.num_requests
+        assert sum(s.total_bytes for s in shards) == batch.total_bytes
+
+    def test_round_robin_keeps_apps_whole(self, mixed_load):
+        batch = TraceBatch.from_requests(mixed_load.trace)
+        assignment = assign_nodes("round-robin-app", batch.offsets,
+                                  batch.file_ids, batch.app_ids, 2)
+        for app in np.unique(batch.app_ids):
+            nodes = np.unique(assignment[batch.app_ids == app])
+            assert len(nodes) == 1
+
+    def test_hash_file_keeps_files_whole(self, mixed_load):
+        batch = TraceBatch.from_requests(mixed_load.trace)
+        assignment = assign_nodes("hash-file", batch.offsets, batch.file_ids,
+                                  batch.app_ids, 4)
+        for fid in np.unique(batch.file_ids):
+            assert len(np.unique(assignment[batch.file_ids == fid])) == 1
+
+    def test_range_offset_orders_by_offset(self, mixed_load):
+        batch = TraceBatch.from_requests(mixed_load.trace)
+        assignment = assign_nodes("range-offset", batch.offsets,
+                                  batch.file_ids, batch.app_ids, 4)
+        # node id must be monotone in offset
+        order = np.argsort(batch.offsets, kind="stable")
+        assert np.all(np.diff(assignment[order]) >= 0)
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError, match="policy"):
+            FleetSimulator(num_nodes=2, policy="modulo-17")
+        with pytest.raises(ValueError, match="policy"):
+            assign_nodes("modulo-17", np.zeros(1), np.zeros(1), np.zeros(1), 2)
+
+
+class TestFleetAggregation:
+    def test_fleet_conserves_bytes(self, mixed_load):
+        for policy in sorted(TRACE_POLICIES):
+            fr = FleetSimulator(num_nodes=4, scheme="ssdup+", policy=policy,
+                                ssd_capacity=SMALL).run(list(mixed_load.trace))
+            assert fr.total_bytes == mixed_load.total_bytes
+            assert fr.bytes_to_ssd + fr.bytes_to_hdd_direct == fr.total_bytes
+
+    def test_straggler_bounds_fleet_time(self, mixed_load):
+        fr = FleetSimulator(num_nodes=4, scheme="ssdup+",
+                            ssd_capacity=SMALL).run(list(mixed_load.trace))
+        assert fr.io_seconds == max(r.io_seconds for r in fr.node_results)
+        assert fr.node_results[fr.straggler].io_seconds == fr.io_seconds
+        assert fr.load_imbalance >= 1.0
+
+    def test_more_nodes_do_not_slow_the_fleet(self, mixed_load):
+        """Sharding over more I/O nodes must not hurt aggregate throughput."""
+
+        trace = list(mixed_load.trace)
+        tp = {
+            n: FleetSimulator(num_nodes=n, scheme="ssdup+", policy="range-offset",
+                              ssd_capacity=SMALL).run(trace).throughput_mbs
+            for n in (1, 4)
+        }
+        assert tp[4] > tp[1]
+
+    def test_run_fleet_schemes(self):
+        # two random-heavy apps, one per node: the burst buffer must win
+        w1 = relabel(ior("segmented-random", 8, total_bytes=SMALL, seed=7),
+                     app_id=0, file_id=0)
+        w2 = relabel(ior("segmented-random", 8, total_bytes=SMALL, seed=8),
+                     app_id=1, file_id=1)
+        load = mixed(w1, w2, burst_requests=256)
+        res = run_fleet_schemes(list(load.trace), num_nodes=2,
+                                schemes=("orangefs", "ssdup+"),
+                                ssd_capacity=SMALL)
+        assert set(res) == {"orangefs", "ssdup+"}
+        for fr in res.values():
+            assert fr.num_nodes == 2
+            assert fr.total_bytes == load.total_bytes
+        assert res["ssdup+"].throughput_mbs > res["orangefs"].throughput_mbs
+
+    def test_gap_replicated_to_all_nodes(self, mixed_load):
+        from repro.core import Gap
+
+        trace = [Gap(7.0)] + list(mixed_load.trace)
+        fr = FleetSimulator(num_nodes=3, scheme="orangefs",
+                            policy="round-robin-app").run(trace)
+        for r in fr.node_results:
+            # every node idles through the compute phase
+            assert r.total_seconds - r.io_seconds == pytest.approx(7.0)
+
+
+NOJAX_SCRIPT = r"""
+import sys
+
+class BlockJax:
+    def find_module(self, name, path=None):
+        if name == "jax" or name.startswith("jax."):
+            return self
+    def load_module(self, name):
+        raise ImportError(f"blocked: {name}")
+
+sys.meta_path.insert(0, BlockJax())
+sys.path.insert(0, "src")
+
+from repro.core import FleetSimulator, compute_stream_scores, ior
+
+w = ior("strided", 8, total_bytes=1 << 24)
+scores = compute_stream_scores(list(w.trace))
+fr = FleetSimulator(num_nodes=2, scheme="ssdup+",
+                    ssd_capacity=1 << 24).run(list(w.trace))
+assert fr.total_bytes == w.total_bytes
+assert len(scores) > 0
+print("NOJAX_OK")
+"""
+
+
+def test_fleet_runs_without_jax():
+    """The control plane (core + fleet, numpy backend) must work jax-free."""
+
+    import os
+    import subprocess
+    import sys
+
+    out = subprocess.run(
+        [sys.executable, "-c", NOJAX_SCRIPT], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=120,
+    )
+    assert "NOJAX_OK" in out.stdout, out.stdout + out.stderr

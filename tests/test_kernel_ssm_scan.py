@@ -7,6 +7,8 @@ import jax.numpy as jnp
 from repro.kernels.ssm_scan.ops import ssm_scan_op
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
+pytestmark = pytest.mark.slow  # interpret-mode Pallas runs, seconds per case
+
 
 def make(b, s, di, n, xdtype, seed=0):
     rng = np.random.default_rng(seed)

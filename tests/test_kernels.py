@@ -15,6 +15,8 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.stream_rf.ops import random_percentage_op, stream_rf_op
 from repro.kernels.stream_rf.ref import stream_rf_ref
 
+pytestmark = pytest.mark.slow  # interpret-mode Pallas runs, seconds per case
+
 
 class TestStreamRF:
     @pytest.mark.parametrize("m", [1, 3, 8, 37, 300])

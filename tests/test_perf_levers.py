@@ -13,6 +13,8 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.launch.steps import make_train_step
+
+pytestmark = pytest.mark.slow  # multi-second per-arch device runs
 from repro.models import get_model
 from repro.optim import AdamWConfig, init_state
 

@@ -5,8 +5,11 @@ dim is exactly divisible by its assigned axis product; unknown/None logical
 names always replicate.
 """
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic no-shrink fallback, same API surface
+    from _hypothesis_fallback import given, settings, st
 
 from repro.distributed.sharding import DEFAULT_RULES, spec_for
 

@@ -2,8 +2,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic no-shrink fallback, same API surface
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     Request,

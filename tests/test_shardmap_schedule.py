@@ -25,8 +25,9 @@ sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 from benchmarks.bench_shardmap_decode import build_fns
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+axis_type = getattr(jax.sharding, "AxisType", None)  # absent in older jax
+kw = {"axis_types": (axis_type.Auto,) * 2} if axis_type else {}
+mesh = jax.make_mesh((2, 4), ("data", "model"), **kw)
 gspmd_ffn, shardmap_ffn, xspec, wspec, w2spec = build_fns(mesh)
 
 rng = np.random.default_rng(0)

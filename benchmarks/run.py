@@ -27,6 +27,7 @@ from benchmarks import (  # noqa: E402
     bench_patterns,
     bench_pipeline,
     bench_queue,
+    bench_replay,
     bench_shardmap_decode,
     bench_tileio,
 )
@@ -44,6 +45,7 @@ SUITES = {
     "kernels": lambda tb: bench_kernels.run(),
     "shardmap_decode": lambda tb: bench_shardmap_decode.run(),
     "fleet": lambda tb: bench_fleet.run(tb),
+    "replay": lambda tb: bench_replay.run(tb),
 }
 
 

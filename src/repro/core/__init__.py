@@ -5,9 +5,13 @@ Layering:
 * detection     — :mod:`repro.core.random_factor` (random factor, Eq. 1)
 * policy        — :mod:`repro.core.adaptive` (Eq. 2/3 adaptive threshold)
 * routing       — :mod:`repro.core.redirector` (Algorithm 1)
-* buffering     — :mod:`repro.core.log_store`, :mod:`repro.core.avl` (§2.5)
-* pipelining    — :mod:`repro.core.pipeline` (two-region + traffic-aware, §2.4)
+* buffering     — :mod:`repro.core.log_store` with two index backends:
+                  :mod:`repro.core.avl` (oracle) and
+                  :mod:`repro.core.extent_index` (vectorized) (§2.5)
+* pipelining    — :mod:`repro.core.pipeline` (two-region + traffic-aware,
+                  Eq. 6 flush costing, §2.4)
 * timing model  — :mod:`repro.core.device_model`, :mod:`repro.core.simulator`
+                  (batched + per-request replay engines)
 * workloads     — :mod:`repro.core.workloads` (IOR/HPIO/MPI-Tile-IO)
 * production IO — :mod:`repro.core.burst_buffer` (real-byte facade used by
                   the checkpoint path)
@@ -21,6 +25,7 @@ from .adaptive import AdaptiveThreshold, StaticWatermarkThreshold
 from .avl import AVLTree, Extent
 from .burst_buffer import BurstBufferWriter
 from .device_model import HDDModel, InterferenceModel, SSDModel
+from .extent_index import INDEX_BACKENDS, ExtentIndex, make_index
 from .log_store import LogRegion, RegionFullError
 from .pipeline import FlushState, SingleRegionBuffer, TwoRegionPipeline
 from .random_factor import (
@@ -44,6 +49,9 @@ __all__ = [
     "StaticWatermarkThreshold",
     "AVLTree",
     "Extent",
+    "ExtentIndex",
+    "INDEX_BACKENDS",
+    "make_index",
     "BurstBufferWriter",
     "HDDModel",
     "SSDModel",

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator
 
+import numpy as np
+
 
 NODE_BYTES = 24  # paper Section 2.5: 3 values x 8 bytes
 
@@ -105,6 +107,18 @@ class AVLTree:
         return self._count
 
     # -- mutation --------------------------------------------------------
+    def insert_batch(self, offsets, sizes, log_offsets) -> None:
+        """Insert many extents in array order (pointer-chasing loop).
+
+        Interface shared with :class:`repro.core.extent_index.ExtentIndex`
+        so :class:`repro.core.log_store.LogRegion` can drive either backend
+        from its batched append path; here it is just the scalar insert in
+        a loop — the AVL stays the bit-exact *oracle*, not the fast path.
+        """
+
+        for off, size, log_off in zip(offsets, sizes, log_offsets):
+            self.insert(int(off), int(size), int(log_off))
+
     def insert(self, offset: int, size: int, log_offset: int) -> None:
         """Insert an extent.  Re-writes of the same original offset replace
         the mapping (latest log copy wins — log-structured semantics)."""
@@ -153,6 +167,21 @@ class AVLTree:
             n = stack.pop()
             yield Extent(n.key, n.size, n.log_offset)
             n = n.right
+
+    def in_order_arrays(self):
+        """``(offsets, sizes, log_offsets)`` int64 arrays of the live
+        extents in ascending-offset order — same contract as
+        :meth:`repro.core.extent_index.ExtentIndex.in_order_arrays` (here
+        materialized from the in-order traversal)."""
+
+        offs = np.empty(self._count, dtype=np.int64)
+        szs = np.empty(self._count, dtype=np.int64)
+        logs = np.empty(self._count, dtype=np.int64)
+        for i, ext in enumerate(self.in_order()):
+            offs[i] = ext.offset
+            szs[i] = ext.size
+            logs[i] = ext.log_offset
+        return offs, szs, logs
 
     def min_key(self) -> int | None:
         n = self._root

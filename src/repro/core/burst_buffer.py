@@ -45,6 +45,7 @@ class BurstBufferWriter:
         adaptive_window: int | None = 64,
         flush_poll_seconds: float = 0.002,
         flush_chunk_bytes: int = 4 << 20,
+        index_backend: str = "avl",
     ):
         os.makedirs(fast_dir, exist_ok=True)
         os.makedirs(slow_dir, exist_ok=True)
@@ -52,11 +53,17 @@ class BurstBufferWriter:
         self.slow_dir = slow_dir
         self._lock = threading.RLock()
         self._last_pct = 0.0
+        # AVL by default: this path interleaves inserts with point lookups
+        # (read-your-writes) under the writer lock, where the AVL's
+        # incremental O(log n) beats ExtentIndex's recompaction-per-read;
+        # the columnar index is for the replay engine's insert-many-then-
+        # flush pattern.
         self.pipeline = TwoRegionPipeline(
             region_bytes,
             traffic_aware=traffic_aware,
             flush_gate=flush_gate,
             percentage_source=lambda: self._last_pct,
+            index_backend=index_backend,
         )
         self.redirector = DataRedirector(
             AdaptiveThreshold(window=adaptive_window), stream_len
@@ -175,7 +182,7 @@ class BurstBufferWriter:
             finally:
                 self._lock.acquire()
         region = self.pipeline.active_region
-        rec = region.records[-1]
+        rec = region.last_record
         fobj = self._region_files[self.pipeline.active]
         fobj.seek(rec.log_offset)
         fobj.write(data)

@@ -175,7 +175,9 @@ class FleetSimulator:
                 scheme=self.scheme, stream_len=self.stream_len,
                 **self.node_kwargs,
             )
-            results.append(node.run(shard.to_items(), scores=scores))
+            # shards stay columnar end-to-end: the batched replay engine
+            # consumes the TraceBatch directly (no item materialization)
+            results.append(node.run(shard, scores=scores))
         return FleetResult(
             scheme=self.scheme,
             policy=self.policy,

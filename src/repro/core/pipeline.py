@@ -37,7 +37,7 @@ class FlushState(enum.Enum):
 class FlushJob:
     region: LogRegion
     bytes_total: int
-    seeks: int  # residual seeks of the AVL-ordered flush
+    seeks: int  # residual seeks of the index-ordered flush
     bytes_done: int = 0
     paused_seconds: float = 0.0
     forced: bool = False
@@ -49,6 +49,31 @@ class FlushJob:
     @property
     def done(self) -> bool:
         return self.bytes_done >= self.bytes_total
+
+    # -- Eq. 6 flush cost (paper Section 2.5) --------------------------
+    def service_seconds(self, hdd) -> float:
+        """Exclusive-HDD time to drain the whole job:
+        ``seeks × seek_time + bytes / seq_bw`` (paper Eq. 6).
+
+        The residual seeks are the gaps left between live extents after
+        the index-ordered sort — the part of the flush the log-structured
+        buffer cannot make sequential.
+        """
+
+        return self.seeks * hdd.seek_time + self.bytes_total / hdd.seq_bw
+
+    def effective_rate(self, hdd) -> float:
+        """Drain rate (B/s) with the residual seeks amortized per byte.
+
+        Every byte-budget drain path charges the flush at this rate, so
+        the seek cost is paid no matter which code path drains the job
+        (foreground-overlapped, compute gap, blocked writer, final
+        drain).
+        """
+
+        if self.bytes_total <= 0:
+            return hdd.seq_bw
+        return self.bytes_total / self.service_seconds(hdd)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,11 +92,15 @@ class TwoRegionPipeline:
         traffic_aware: bool = True,
         flush_gate: float = 0.5,
         percentage_source: Callable[[], float] | None = None,
+        index_backend: str = "numpy",
     ):
-        self.regions = (LogRegion(region_capacity, "R0"), LogRegion(region_capacity, "R1"))
+        self.regions = (
+            LogRegion(region_capacity, "R0", index_backend=index_backend),
+            LogRegion(region_capacity, "R1", index_backend=index_backend),
+        )
         self.active = 0
         self.flush_job: FlushJob | None = None
-        self._flush_backlog: list[LogRegion] = []
+        self._flush_backlog: list[FlushJob] = []
         self.traffic_aware = traffic_aware
         self.flush_gate = flush_gate
         # Detector hook: returns the current stream random percentage.
@@ -101,11 +130,7 @@ class TwoRegionPipeline:
 
         # Active region is full: try to swap to the standby region.
         standby = self.standby_region
-        standby_busy = (
-            standby.used_bytes > 0
-            or (self.flush_job is not None and self.flush_job.region is standby)
-            or standby in self._flush_backlog
-        )
+        standby_busy = standby.used_bytes > 0 or self._scheduled(standby)
         if standby_busy:
             self.blocked_events += 1
             return AppendOutcome(ok=False, blocked=True)
@@ -119,15 +144,23 @@ class TwoRegionPipeline:
         self.active_region.append(file_id, offset, size)
         return AppendOutcome(ok=True, swapped=True)
 
+    def _scheduled(self, region: LogRegion) -> bool:
+        return (
+            self.flush_job is not None and self.flush_job.region is region
+        ) or any(j.region is region for j in self._flush_backlog)
+
     def _schedule_flush(self, region: LogRegion) -> None:
+        # bytes/seeks are fixed at schedule time: a scheduled region never
+        # receives further appends (it is no longer the active region)
+        job = FlushJob(
+            region=region,
+            bytes_total=region.flush_bytes(),
+            seeks=region.seek_count_sorted(),
+        )
         if self.flush_job is None:
-            self.flush_job = FlushJob(
-                region=region,
-                bytes_total=region.flush_bytes(),
-                seeks=region.seek_count_sorted(),
-            )
+            self.flush_job = job
         else:
-            self._flush_backlog.append(region)
+            self._flush_backlog.append(job)
 
     # -- flush path -------------------------------------------------------
     def flush_state(self) -> FlushState:
@@ -179,20 +212,24 @@ class TwoRegionPipeline:
         self.flush_job = None
         self.flushes_completed += 1
         if self._flush_backlog:
-            self._schedule_flush(self._flush_backlog.pop(0))
+            self.flush_job = self._flush_backlog.pop(0)
 
     def drain(self) -> list[FlushJob]:
-        """Schedule flushes for all remaining data (end of I/O phase)."""
+        """Schedule and force flushes for ALL remaining data (end of I/O
+        phase), returning every outstanding job — the active one AND the
+        backlog — so a caller draining the returned jobs can never stall
+        on a never-forced second region."""
 
-        jobs: list[FlushJob] = []
         for region in self.regions:
-            if region.used_bytes > 0 and not (
-                self.flush_job is not None and self.flush_job.region is region
-            ) and region not in self._flush_backlog:
+            if region.used_bytes > 0 and not self._scheduled(region):
                 self._schedule_flush(region)
+        jobs: list[FlushJob] = []
         if self.flush_job is not None:
             self.flush_job.forced = True
             jobs.append(self.flush_job)
+        for job in self._flush_backlog:
+            job.forced = True
+            jobs.append(job)
         return jobs
 
     # -- accounting ---------------------------------------------------------

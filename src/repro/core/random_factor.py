@@ -247,6 +247,24 @@ def stream_percentage(stream: Sequence[Request]) -> float:
     return random_percentage(offs, szs)
 
 
+def seek_distance_np(
+    offsets: Sequence[int] | np.ndarray, sizes: Sequence[int] | np.ndarray
+) -> int:
+    """Sorted seek distance of one stream given as plain arrays (int64,
+    exact) — the array-native form of :func:`sorted_seek_distance`, used
+    by the batched replay engine for overflow subsets that have no
+    precomputed score."""
+
+    offs = np.asarray(offsets, dtype=np.int64)
+    if offs.size <= 1:
+        return 0
+    szs = np.asarray(sizes, dtype=np.int64)
+    order = np.argsort(offs, kind="stable")
+    so, ss = offs[order], szs[order]
+    gaps = so[1:] - so[:-1] - ss[:-1]
+    return int(np.abs(gaps[gaps != 0]).sum())
+
+
 def sorted_seek_distance(stream: Sequence[Request]) -> int:
     """Total logical seek distance after sorting (used by the HDD model).
 
@@ -258,7 +276,4 @@ def sorted_seek_distance(stream: Sequence[Request]) -> int:
         return 0
     offs = np.fromiter((r.offset for r in stream), dtype=np.int64, count=len(stream))
     szs = np.fromiter((r.size for r in stream), dtype=np.int64, count=len(stream))
-    order = np.argsort(offs, kind="stable")
-    so, ss = offs[order], szs[order]
-    gaps = so[1:] - so[:-1] - ss[:-1]
-    return int(np.abs(gaps[gaps != 0]).sum())
+    return seek_distance_np(offs, szs)

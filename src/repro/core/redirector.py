@@ -72,6 +72,34 @@ class DataRedirector:
         self.decisions: list[tuple[float, float, Device]] = []  # (pct, thr, dev)
 
     # ------------------------------------------------------------------
+    def route_scored(self, nbytes: int, percentage: float) -> Device:
+        """Route one already-scored stream without materializing requests.
+
+        The batched replay engine's entry point: identical policy/device
+        evolution to :meth:`route_stream` (same observe, same hysteresis,
+        same stats), driven by the stream's byte count and precomputed
+        random percentage alone — no per-request Python.
+        """
+
+        # The device for THIS stream was decided by the previous stream
+        # (Algorithm 1's "send requests of next stream to ...").
+        device = self.current_device
+        threshold_in_effect = self.policy.threshold
+        self.policy.observe(percentage)
+
+        self._index += 1
+        self.bytes_to[device] += nbytes
+        self.streams_to[device] += 1
+        self.decisions.append((percentage, threshold_in_effect, device))
+
+        # Decide where the NEXT stream goes (hysteresis: equality keeps).
+        new_threshold = self.policy.threshold
+        if percentage > new_threshold and device is Device.HDD:
+            self.current_device = Device.SSD
+        elif percentage < new_threshold and device is Device.SSD:
+            self.current_device = Device.HDD
+        return device
+
     def route_stream(
         self, stream: Sequence[Request], percentage: float | None = None
     ) -> RoutedStream:
@@ -82,32 +110,18 @@ class DataRedirector:
         per-stream sort here; it must equal ``stream_percentage(stream)``.
         """
 
-        # The device for THIS stream was decided by the previous stream
-        # (Algorithm 1's "send requests of next stream to ...").
-        device = self.current_device
         pct = stream_percentage(stream) if percentage is None else percentage
+        index = self._index
         threshold_in_effect = self.policy.threshold
-        self.policy.observe(pct)
-
-        routed = RoutedStream(
+        nbytes = sum(r.size for r in stream)
+        device = self.route_scored(nbytes, pct)
+        return RoutedStream(
             stream=tuple(stream),
             device=device,
             percentage=pct,
             threshold=threshold_in_effect,
-            index=self._index,
+            index=index,
         )
-        self._index += 1
-        self.bytes_to[device] += routed.bytes
-        self.streams_to[device] += 1
-        self.decisions.append((pct, threshold_in_effect, device))
-
-        # Decide where the NEXT stream goes (hysteresis: equality keeps).
-        new_threshold = self.policy.threshold
-        if pct > new_threshold and device is Device.HDD:
-            self.current_device = Device.SSD
-        elif pct < new_threshold and device is Device.SSD:
-            self.current_device = Device.HDD
-        return routed
 
     def route(self, requests: Iterable[Request]) -> Iterable[RoutedStream]:
         """Stream-group an arriving request sequence and route each stream."""

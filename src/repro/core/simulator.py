@@ -17,12 +17,36 @@ Timing model:
   ``wall = max(net_time, device_time)``.
 * HDD device time = CFQ-sorted seeks × seek_time + sweep distance × coeff
   + bytes / seq_bw  (see ``device_model`` calibration notes).
+* Flushes are charged per the paper's Eq. 6: a flush job of ``bytes``
+  with ``seeks`` residual (post-sort) head movements drains in
+  ``seeks × seek_time + bytes / seq_bw`` of exclusive HDD time — the
+  seek cost is amortized into :meth:`FlushJob.effective_rate` so EVERY
+  drain path pays it: foreground-overlapped flushing, the
+  interference-shared path, compute gaps, the blocked-writer drain, and
+  the end-of-trace drain.
 * The background flusher shares the HDD with foreground HDD writes through
   :class:`InterferenceModel` (fair share + inflation phi, paper Eq. 7); it
-  runs at full sequential bandwidth while the foreground is on the SSD or
+  runs at the job's effective rate while the foreground is on the SSD or
   during compute gaps.
 * A ``Gap`` item models a compute phase (paper Fig. 14): only the flusher
-  runs.
+  runs, continuing through the flush backlog until the gap budget or the
+  backlog is exhausted.
+
+Two replay engines produce bit-identical :class:`SimResult`\\ s:
+
+* ``engine="batched"`` (default) — routes and accounts WHOLE streams
+  against precomputed :class:`repro.core.trace.StreamScores`; SSD-bound
+  streams are appended via :meth:`LogRegion.append_batch` and timed in
+  vectorized runs that only drop to Python at state boundaries (region
+  swap, writer block, flush-job completion).  No per-request Python in
+  the hot path.
+* ``engine="per-request"`` — the seed's request-at-a-time loop, kept as
+  the oracle (``tests/test_batched_replay.py`` asserts equality).
+
+Vectorized accounting preserves bit-exactness by construction: per-request
+walls are elementwise IEEE ops, clock accumulation uses the strictly
+sequential ``np.add.accumulate`` (not pairwise ``np.sum``), and flush
+quanta truncate per request exactly like the scalar ``int(rate * wall)``.
 
 Accounting matches the paper's measurements: reported throughput uses the
 **application-visible I/O time** (``io_seconds``: last foreground byte
@@ -36,6 +60,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Sequence
 
+import numpy as np
+
 from .adaptive import AdaptiveThreshold, StaticWatermarkThreshold
 from .device_model import HDDModel, IngestLink, InterferenceModel, SSDModel
 from .pipeline import SingleRegionBuffer, TwoRegionPipeline
@@ -44,11 +70,34 @@ from .random_factor import (
     Request,
     StreamGrouper,
     random_factor_sum,
+    seek_distance_np,
     sorted_seek_distance,
     stream_percentage,
 )
 from .redirector import DataRedirector, Device
-from .trace import Gap, StreamScores, TraceItem
+from .trace import (
+    Gap,
+    StreamScores,
+    TraceBatch,
+    TraceItem,
+    compute_stream_scores,
+)
+
+ENGINES = ("batched", "per-request")
+
+
+def _seq_add(start: float, values: np.ndarray) -> float:
+    """Left-to-right float accumulation — bit-identical to looping
+    ``start += v`` (``np.add.accumulate`` is strictly sequential, unlike
+    ``np.sum``'s pairwise reduction)."""
+
+    n = len(values)
+    if n == 0:
+        return start
+    arr = np.empty(n + 1, dtype=np.float64)
+    arr[0] = start
+    arr[1:] = values
+    return float(np.add.accumulate(arr)[-1])
 
 
 @dataclasses.dataclass
@@ -75,7 +124,22 @@ class SimResult:
         return self.bytes_to_ssd / self.total_bytes if self.total_bytes else 0.0
 
     def app_throughput_mbs(self, app_id: int) -> float:
+        if not self.io_seconds:  # gap-only / empty traces: no I/O time
+            return 0.0
         return self.per_app_bytes.get(app_id, 0) / self.io_seconds / 1e6
+
+
+@dataclasses.dataclass
+class _ReplayState:
+    """Mutable per-run accounting shared by both engines."""
+
+    clock: float = 0.0
+    gap_seconds: float = 0.0
+    bytes_ssd: int = 0
+    bytes_hdd: int = 0
+    blocked_seconds: float = 0.0
+    peak_ssd: int = 0
+    per_app: dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class IONodeSimulator:
@@ -92,10 +156,15 @@ class IONodeSimulator:
         stream_len: int = DEFAULT_STREAM_LEN,
         flush_gate: float = 0.5,
         adaptive_window: int | None = 64,
+        index_backend: str = "numpy",
+        engine: str = "batched",
     ):
         if scheme not in ("orangefs", "orangefs-bb", "ssdup", "ssdup+"):
             raise ValueError(f"unknown scheme {scheme}")
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         self.scheme = scheme
+        self.engine = engine
         self.hdd = hdd or HDDModel()
         self.ssd = ssd or SSDModel()
         self.link = link or IngestLink()
@@ -109,6 +178,7 @@ class IONodeSimulator:
             self.pipeline = TwoRegionPipeline(
                 ssd_capacity // 2, traffic_aware=True, flush_gate=flush_gate,
                 percentage_source=lambda: self._last_pct,
+                index_backend=index_backend,
             )
             self.redirector: DataRedirector | None = DataRedirector(policy, stream_len)
         elif scheme == "ssdup":
@@ -116,19 +186,142 @@ class IONodeSimulator:
             self.pipeline = TwoRegionPipeline(
                 ssd_capacity // 2, traffic_aware=False,
                 percentage_source=lambda: self._last_pct,
+                index_backend=index_backend,
             )
             self.redirector = DataRedirector(policy, stream_len)
         elif scheme == "orangefs-bb":
             self.pipeline = SingleRegionBuffer(
                 ssd_capacity,
                 percentage_source=lambda: self._last_pct,
+                index_backend=index_backend,
             )
             self.redirector = None
         else:  # orangefs
             self.pipeline = None  # type: ignore[assignment]
             self.redirector = None
 
+    # -- shared timing primitives (both engines) -----------------------
+    def _advance_fg(
+        self, st: _ReplayState, device_dt: float, nbytes: int,
+        hdd_foreground: bool,
+    ) -> None:
+        """One foreground operation: device time ``device_dt`` alone,
+        network-capped, with the background flush sharing the HDD."""
+
+        flushing = (
+            self.pipeline is not None and self.pipeline.flush_job is not None
+        )
+        allowed = flushing and self.pipeline.flush_allowed()
+        net_dt = self.link.time(nbytes)
+        if not flushing or not allowed:
+            wall = max(net_dt, device_dt)
+            if flushing:
+                self.pipeline.note_pause(wall)
+            st.clock += wall
+            return
+        job = self.pipeline.flush_job
+        if hdd_foreground:
+            disk_dt = device_dt * self.interference.foreground_slowdown()
+            wall = max(net_dt, disk_dt)
+            rate = (
+                job.effective_rate(self.hdd)
+                * self.interference.flush_rate_fraction()
+            )
+        else:
+            wall = max(net_dt, device_dt)
+            rate = job.effective_rate(self.hdd)
+        self.pipeline.flush_progress(int(rate * wall))
+        st.clock += wall
+
+    def _drain_current_flush(self, st: _ReplayState) -> float:
+        """Block the writer until the active flush finishes (Eq. 6 rate)."""
+
+        assert self.pipeline is not None and self.pipeline.flush_job is not None
+        self.pipeline.force_flush()
+        job = self.pipeline.flush_job
+        dt = job.bytes_left / job.effective_rate(self.hdd)
+        self.pipeline.flush_progress(job.bytes_left)
+        st.clock += dt
+        return dt
+
+    def _gap(self, st: _ReplayState, seconds: float) -> None:
+        """Compute phase: the flusher gets the HDD to itself and keeps
+        draining through the backlog until the gap budget runs out."""
+
+        if self.pipeline is not None:
+            budget = seconds
+            while budget > 0 and self.pipeline.flush_job is not None:
+                job = self.pipeline.flush_job
+                rate = job.effective_rate(self.hdd)
+                need = job.bytes_left / rate
+                if need <= budget:
+                    self.pipeline.flush_progress(job.bytes_left)
+                    budget -= need
+                else:
+                    self.pipeline.flush_progress(int(rate * budget))
+                    break
+        st.clock += seconds
+        st.gap_seconds += seconds
+
+    def _finalize(self, st: _ReplayState) -> SimResult:
+        io_seconds = st.clock - st.gap_seconds  # application-visible I/O time
+
+        # -- drain: flush whatever is still buffered (overlaps the NEXT
+        #    compute phase in a real deployment; excluded from io_seconds)
+        if self.pipeline is not None:
+            self.pipeline.drain()
+            while self.pipeline.flush_job is not None:
+                job = self.pipeline.flush_job
+                st.clock += job.bytes_left / job.effective_rate(self.hdd)
+                self.pipeline.flush_progress(job.bytes_left)
+
+        total_bytes = st.bytes_ssd + st.bytes_hdd
+        return SimResult(
+            scheme=self.scheme,
+            io_seconds=io_seconds,
+            total_seconds=st.clock,
+            total_bytes=total_bytes,
+            bytes_to_ssd=st.bytes_ssd,
+            bytes_to_hdd_direct=st.bytes_hdd,
+            flushes=self.pipeline.flushes_completed if self.pipeline else 0,
+            flush_paused_seconds=(
+                self.pipeline.total_paused_seconds if self.pipeline else 0.0
+            ),
+            blocked_seconds=st.blocked_seconds,
+            peak_ssd_occupancy=st.peak_ssd,
+            metadata_bytes=self.pipeline.metadata_bytes if self.pipeline else 0,
+            per_app_bytes=st.per_app,
+        )
+
     # ------------------------------------------------------------------
+    def run(
+        self,
+        trace: TraceBatch | Sequence[TraceItem],
+        scores: StreamScores | None = None,
+    ) -> SimResult:
+        """Replay ``trace``; ``scores`` (from
+        :func:`repro.core.trace.compute_stream_scores`, same ``stream_len``)
+        supplies every stream's random percentage / seek count / seek
+        distance so the hot loop never re-sorts a stream on the host.  The
+        batched engine computes them itself when omitted."""
+
+        if scores is not None and scores.stream_len != self.stream_len:
+            raise ValueError(
+                f"scores computed for stream_len={scores.stream_len}, "
+                f"simulator uses {self.stream_len}"
+            )
+        if self.engine == "batched":
+            batch = (
+                trace if isinstance(trace, TraceBatch)
+                else TraceBatch.from_items(trace)
+            )
+            if scores is None:
+                scores = compute_stream_scores(batch, self.stream_len)
+            return self._run_batched(batch, scores)
+        items = trace.to_items() if isinstance(trace, TraceBatch) else trace
+        return self._run_scalar(items, scores)
+
+    # -- per-request engine (the oracle) -------------------------------
     def _hdd_stream_time(
         self,
         stream: Sequence[Request],
@@ -144,73 +337,17 @@ class IONodeSimulator:
             dist = sorted_seek_distance(stream)
         return self.hdd.write_time(nbytes, seeks, dist)
 
-    def run(
+    def _run_scalar(
         self,
         trace: Sequence[TraceItem],
-        scores: StreamScores | None = None,
+        scores: StreamScores | None,
     ) -> SimResult:
-        """Replay ``trace``; ``scores`` (from
-        :func:`repro.core.trace.compute_stream_scores`, same ``stream_len``)
-        supplies every stream's random percentage / seek count / seek
-        distance so the hot loop never re-sorts a stream on the host."""
-
-        if scores is not None and scores.stream_len != self.stream_len:
-            raise ValueError(
-                f"scores computed for stream_len={scores.stream_len}, "
-                f"simulator uses {self.stream_len}"
-            )
-        clock = 0.0
-        gap_seconds = 0.0
-        bytes_ssd = 0
-        bytes_hdd = 0
-        blocked_seconds = 0.0
-        peak_ssd = 0
-        per_app: dict[int, int] = {}
+        st = _ReplayState()
         grouper = StreamGrouper(self.stream_len)
-
-        def advance(device_dt: float, nbytes: int, hdd_foreground: bool) -> None:
-            """One foreground operation: device time ``device_dt`` alone,
-            network-capped, with the background flush sharing the HDD."""
-
-            nonlocal clock
-            flushing = (
-                self.pipeline is not None
-                and self.pipeline.flush_job is not None
-            )
-            allowed = flushing and self.pipeline.flush_allowed()
-            net_dt = self.link.time(nbytes)
-            if not flushing or not allowed:
-                wall = max(net_dt, device_dt)
-                if flushing:
-                    self.pipeline.note_pause(wall)
-                clock += wall
-                return
-            if hdd_foreground:
-                disk_dt = device_dt * self.interference.foreground_slowdown()
-                wall = max(net_dt, disk_dt)
-                rate = self.hdd.seq_bw * self.interference.flush_rate_fraction()
-            else:
-                wall = max(net_dt, device_dt)
-                rate = self.hdd.seq_bw
-            self.pipeline.flush_progress(int(rate * wall))
-            clock += wall
-
-        def drain_current_flush() -> float:
-            """Block the writer until the active flush finishes."""
-
-            assert self.pipeline is not None and self.pipeline.flush_job is not None
-            self.pipeline.force_flush()
-            left = self.pipeline.flush_job.bytes_left
-            dt = left / self.hdd.seq_bw
-            self.pipeline.flush_progress(left)
-            nonlocal clock
-            clock += dt
-            return dt
-
         stream_idx = 0
 
         def handle_stream(stream: list[Request]) -> None:
-            nonlocal bytes_ssd, bytes_hdd, peak_ssd, blocked_seconds, stream_idx
+            nonlocal stream_idx
             idx = stream_idx
             stream_idx += 1
             seeks: int | None = None
@@ -233,12 +370,14 @@ class IONodeSimulator:
             else:
                 pct = stream_percentage(stream)
             for r in stream:
-                per_app[r.app_id] = per_app.get(r.app_id, 0) + r.size
+                st.per_app[r.app_id] = st.per_app.get(r.app_id, 0) + r.size
 
             if self.scheme == "orangefs":
-                advance(self._hdd_stream_time(stream, seeks, dist), nbytes,
-                        hdd_foreground=True)
-                bytes_hdd += nbytes
+                self._advance_fg(
+                    st, self._hdd_stream_time(stream, seeks, dist), nbytes,
+                    hdd_foreground=True,
+                )
+                st.bytes_hdd += nbytes
                 self._last_pct = pct
                 return
 
@@ -263,31 +402,35 @@ class IONodeSimulator:
                             overflow.append(r)
                             continue
                         # SSDUP/SSDUP+: wait for a region to free up
-                        blocked_seconds += drain_current_flush()
+                        st.blocked_seconds += self._drain_current_flush(st)
                         out = self.pipeline.append(r.file_id, r.offset, r.size)
                         assert out.ok, "append must succeed after drain"
-                    advance(self.ssd.write_time(r.size), r.size, hdd_foreground=False)
-                    bytes_ssd += r.size
+                    self._advance_fg(
+                        st, self.ssd.write_time(r.size), r.size,
+                        hdd_foreground=False,
+                    )
+                    st.bytes_ssd += r.size
                 if overflow:
                     # overflow is a subset of the stream — no precomputed
                     # score exists for it, so fall back to scalar scoring
                     ob = sum(r.size for r in overflow)
-                    advance(self._hdd_stream_time(overflow), ob, hdd_foreground=True)
-                    bytes_hdd += ob
-                peak_ssd = max(peak_ssd, self.pipeline.buffered_bytes)
+                    self._advance_fg(
+                        st, self._hdd_stream_time(overflow), ob,
+                        hdd_foreground=True,
+                    )
+                    st.bytes_hdd += ob
+                st.peak_ssd = max(st.peak_ssd, self.pipeline.buffered_bytes)
             else:
-                advance(self._hdd_stream_time(stream, seeks, dist), nbytes,
-                        hdd_foreground=True)
-                bytes_hdd += nbytes
+                self._advance_fg(
+                    st, self._hdd_stream_time(stream, seeks, dist), nbytes,
+                    hdd_foreground=True,
+                )
+                st.bytes_hdd += nbytes
 
         # -- main loop ----------------------------------------------------
         for item in trace:
             if isinstance(item, Gap):
-                # compute phase: the flusher gets the HDD to itself
-                if self.pipeline is not None and self.pipeline.flush_job is not None:
-                    self.pipeline.flush_progress(int(item.seconds * self.hdd.seq_bw))
-                clock += item.seconds
-                gap_seconds += item.seconds
+                self._gap(st, item.seconds)
                 continue
             full = grouper.push(item)
             if full is not None:
@@ -300,40 +443,249 @@ class IONodeSimulator:
                 f"precomputed scores cover {len(scores)} streams but the "
                 f"trace produced {stream_idx} (wrong trace?)"
             )
+        return self._finalize(st)
 
-        io_seconds = clock - gap_seconds  # application-visible I/O time
+    # -- batched engine -------------------------------------------------
+    def _run_batched(self, batch: TraceBatch, scores: StreamScores) -> SimResult:
+        st = _ReplayState()
+        stream_len = self.stream_len
+        bounds = batch.stream_bounds(stream_len)
+        n_streams = len(bounds) - 1
+        if len(scores) != n_streams:
+            raise ValueError(
+                f"precomputed scores cover {len(scores)} streams but the "
+                f"trace produced {n_streams} (wrong trace?)"
+            )
+        if n_streams:
+            nb, osum = batch.stream_sums(stream_len)
+            bad = np.nonzero((nb != scores.nbytes) | (osum != scores.offset_sum))[0]
+            if len(bad):
+                raise ValueError(
+                    f"stream {int(bad[0])} does not match the precomputed "
+                    "scores (wrong trace or stream grouping?)"
+                )
 
-        # -- drain: flush whatever is still buffered (overlaps the NEXT
-        #    compute phase in a real deployment; excluded from io_seconds) --
-        if self.pipeline is not None:
-            self.pipeline.drain()
-            while self.pipeline.flush_job is not None:
-                job = self.pipeline.flush_job
-                clock += job.bytes_left / self.hdd.seq_bw
-                self.pipeline.flush_progress(job.bytes_left)
-                self.pipeline.force_flush()
+        num_requests = batch.num_requests
+        # per-app byte totals are order-independent: one whole-trace pass
+        # instead of per-stream dict updates
+        if num_requests:
+            apps, inverse = np.unique(batch.app_ids, return_inverse=True)
+            sums = np.zeros(len(apps), dtype=np.int64)
+            np.add.at(sums, inverse, batch.sizes)
+            st.per_app = {int(a): int(s) for a, s in zip(apps, sums)}
+        gap_pos = batch.gap_positions
+        gap_sec = batch.gap_seconds
+        n_gaps = len(gap_pos)
+        gi = 0
+        for s in range(n_streams):
+            a, b = int(bounds[s]), int(bounds[s + 1])
+            # a full stream completes AT its last request, i.e. before any
+            # gap marker at position b; the trailing partial stream is only
+            # flushed at end-of-trace, i.e. after ALL remaining gaps.
+            fire_before = b if b - a == stream_len else num_requests + 1
+            while gi < n_gaps and gap_pos[gi] < fire_before:
+                self._gap(st, float(gap_sec[gi]))
+                gi += 1
+            self._handle_stream_batched(st, batch, scores, s, a, b)
+        while gi < n_gaps:
+            self._gap(st, float(gap_sec[gi]))
+            gi += 1
+        return self._finalize(st)
 
-        total_bytes = bytes_ssd + bytes_hdd
-        return SimResult(
-            scheme=self.scheme,
-            io_seconds=io_seconds,
-            total_seconds=clock,
-            total_bytes=total_bytes,
-            bytes_to_ssd=bytes_ssd,
-            bytes_to_hdd_direct=bytes_hdd,
-            flushes=self.pipeline.flushes_completed if self.pipeline else 0,
-            flush_paused_seconds=(
-                self.pipeline.total_paused_seconds if self.pipeline else 0.0
-            ),
-            blocked_seconds=blocked_seconds,
-            peak_ssd_occupancy=peak_ssd,
-            metadata_bytes=self.pipeline.metadata_bytes if self.pipeline else 0,
-            per_app_bytes=per_app,
-        )
+    def _advance_ssd_run(self, st: _ReplayState, walls: np.ndarray) -> None:
+        """Vectorized counterpart of per-request ``_advance_fg(...,
+        hdd_foreground=False)`` over a run of SSD writes: one numpy pass
+        per flush-state segment, dropping to Python only when a flush job
+        completes mid-run."""
+
+        i, m = 0, len(walls)
+        while i < m:
+            job = self.pipeline.flush_job
+            if job is None or not self.pipeline.flush_allowed():
+                seg = walls[i:]
+                if job is not None:  # paused: same pause accounting
+                    job.paused_seconds = _seq_add(job.paused_seconds, seg)
+                    self.pipeline.total_paused_seconds = _seq_add(
+                        self.pipeline.total_paused_seconds, seg
+                    )
+                st.clock = _seq_add(st.clock, seg)
+                return
+            rate = job.effective_rate(self.hdd)
+            quanta = (rate * walls[i:]).astype(np.int64)
+            cq = np.cumsum(quanta)
+            j = int(np.searchsorted(cq, job.bytes_left, side="left"))
+            if j >= m - i:  # job survives the whole run
+                self.pipeline.flush_progress(int(cq[-1]))
+                st.clock = _seq_add(st.clock, walls[i:])
+                return
+            # requests i..i+j drain the job dry (overshoot in the final
+            # quantum is discarded, like the scalar per-request call)
+            self.pipeline.flush_progress(int(cq[j]))
+            st.clock = _seq_add(st.clock, walls[i:i + j + 1])
+            i += j + 1
+
+    def _handle_stream_batched(
+        self,
+        st: _ReplayState,
+        batch: TraceBatch,
+        scores: StreamScores,
+        s: int,
+        a: int,
+        b: int,
+    ) -> None:
+        sizes = batch.sizes[a:b]
+        offsets = batch.offsets[a:b]
+        file_ids = batch.file_ids[a:b]
+        nbytes = int(scores.nbytes[s])
+        pct = float(scores.percentage[s])
+        seeks = int(scores.rf_sum[s])
+        dist = int(scores.seek_distance[s])
+
+        if self.scheme == "orangefs":
+            self._advance_fg(
+                st, self.hdd.write_time(nbytes, seeks, dist), nbytes,
+                hdd_foreground=True,
+            )
+            st.bytes_hdd += nbytes
+            self._last_pct = pct
+            return
+
+        if self.scheme == "orangefs-bb":
+            device = Device.SSD  # plain BB caches everything it can
+        else:
+            assert self.redirector is not None
+            device = self.redirector.route_scored(nbytes, pct)
+        self._last_pct = pct
+
+        if device is not Device.SSD:
+            self._advance_fg(
+                st, self.hdd.write_time(nbytes, seeks, dist), nbytes,
+                hdd_foreground=True,
+            )
+            st.bytes_hdd += nbytes
+            return
+
+        walls = np.maximum(sizes / self.link.bw, sizes / self.ssd.write_bw)
+        csum = np.cumsum(sizes)
+        if isinstance(self.pipeline, SingleRegionBuffer):
+            self._ssd_stream_single_region(
+                st, offsets, sizes, file_ids, walls, csum
+            )
+        else:
+            self._ssd_stream_two_region(
+                st, offsets, sizes, file_ids, walls, csum
+            )
+        st.peak_ssd = max(st.peak_ssd, self.pipeline.buffered_bytes)
+
+    def _ssd_stream_two_region(
+        self, st, offsets, sizes, file_ids, walls, csum
+    ) -> None:
+        """SSDUP/SSDUP+ SSD path: maximal in-region runs appended and timed
+        in one shot; region swaps and writer blocks at run boundaries."""
+
+        n = len(sizes)
+        pos = 0
+        while pos < n:
+            region = self.pipeline.active_region
+            base = int(csum[pos - 1]) if pos else 0
+            limit = base + region.free_bytes()
+            k = int(np.searchsorted(csum, limit, side="right"))
+            if k > pos:  # requests [pos, k) fit the active region
+                region.append_batch(
+                    file_ids[pos:k], offsets[pos:k], sizes[pos:k]
+                )
+                self._advance_ssd_run(st, walls[pos:k])
+                st.bytes_ssd += int(csum[k - 1]) - base
+                pos = k
+                continue
+            # request `pos` does not fit: swap, or block + drain, then retry
+            out = self.pipeline.append(
+                int(file_ids[pos]), int(offsets[pos]), int(sizes[pos])
+            )
+            if out.blocked:
+                st.blocked_seconds += self._drain_current_flush(st)
+                out = self.pipeline.append(
+                    int(file_ids[pos]), int(offsets[pos]), int(sizes[pos])
+                )
+                assert out.ok, "append must succeed after drain"
+            self._advance_ssd_run(st, walls[pos:pos + 1])
+            st.bytes_ssd += int(sizes[pos])
+            pos += 1
+
+    def _ssd_stream_single_region(
+        self, st, offsets, sizes, file_ids, walls, csum
+    ) -> None:
+        """Plain-BB SSD path: buffer until (nearly) full, then everything
+        else in the stream overflows straight to the HDD."""
+
+        n = len(sizes)
+        pos = 0
+        overflow_from: int | None = None
+        region = self.pipeline.regions[0]
+        cap_quantum = region.capacity // 256
+        while pos < n:
+            if self.pipeline.flush_job is not None:
+                # region draining: every remaining append is rejected (the
+                # per-request path counts each as a blocked event)
+                self.pipeline.blocked_events += n - pos
+                overflow_from = pos
+                break
+            base = int(csum[pos - 1]) if pos else 0
+            free = region.free_bytes()
+            k = int(np.searchsorted(csum, base + free, side="right"))
+            if k == pos:
+                # doesn't fit: the append schedules the forced flush and
+                # rejects; everything from here on overflows
+                out = self.pipeline.append(
+                    int(file_ids[pos]), int(offsets[pos]), int(sizes[pos])
+                )
+                assert out.blocked
+                self.pipeline.blocked_events += n - pos - 1
+                overflow_from = pos
+                break
+            # eager-flush trigger: first t in [pos, k) whose append leaves
+            # free space below max(size_t, capacity/256)
+            rel = csum[pos:k] - base
+            trig = (free - rel) < np.maximum(sizes[pos:k], cap_quantum)
+            if trig.any():
+                t = pos + int(np.argmax(trig))
+                if t > pos:
+                    region.append_batch(
+                        file_ids[pos:t], offsets[pos:t], sizes[pos:t]
+                    )
+                    self._advance_ssd_run(st, walls[pos:t])
+                    st.bytes_ssd += int(csum[t - 1]) - base
+                # the trigger request goes through the scalar append, which
+                # schedules the forced flush exactly like the oracle
+                out = self.pipeline.append(
+                    int(file_ids[t]), int(offsets[t]), int(sizes[t])
+                )
+                assert out.ok
+                self._advance_ssd_run(st, walls[t:t + 1])
+                st.bytes_ssd += int(sizes[t])
+                pos = t + 1
+            else:
+                region.append_batch(
+                    file_ids[pos:k], offsets[pos:k], sizes[pos:k]
+                )
+                self._advance_ssd_run(st, walls[pos:k])
+                st.bytes_ssd += int(csum[k - 1]) - base
+                pos = k
+        if overflow_from is not None:
+            o_offs = offsets[overflow_from:]
+            o_szs = sizes[overflow_from:]
+            ob = int(o_szs.sum())
+            seeks = random_factor_sum(o_offs, o_szs)
+            dist = seek_distance_np(o_offs, o_szs)
+            self._advance_fg(
+                st, self.hdd.write_time(ob, seeks, dist), ob,
+                hdd_foreground=True,
+            )
+            st.bytes_hdd += ob
 
 
 def run_schemes(
-    trace: Sequence[TraceItem],
+    trace: TraceBatch | Sequence[TraceItem],
     schemes: Iterable[str] = ("orangefs", "orangefs-bb", "ssdup", "ssdup+"),
     scores: StreamScores | None = None,
     **kwargs,
@@ -344,7 +696,8 @@ def run_schemes(
     across every scheme's replay.
     """
 
-    trace = list(trace)
+    if not isinstance(trace, TraceBatch):
+        trace = list(trace)
     return {
         s: IONodeSimulator(scheme=s, **kwargs).run(trace, scores=scores)
         for s in schemes

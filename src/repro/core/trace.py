@@ -206,6 +206,34 @@ class TraceBatch:                               # __eq__ would raise
         ]
 
     # -- stream view ----------------------------------------------------
+    def stream_bounds(self, stream_len: int = DEFAULT_STREAM_LEN) -> np.ndarray:
+        """Request-index boundaries of the streams: ``bounds[s] .. bounds[s+1]``
+        is stream ``s`` (full windows, then the trailing partial), matching
+        :class:`repro.core.random_factor.StreamGrouper` emission order."""
+
+        r = self.num_requests
+        if r == 0:
+            return np.zeros(1, dtype=np.int64)
+        bounds = np.arange(0, r, stream_len, dtype=np.int64)
+        return np.append(bounds, r)
+
+    def stream_sums(
+        self, stream_len: int = DEFAULT_STREAM_LEN
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-stream ``(nbytes, offset_sum)`` — the checksums the replay
+        engine compares against :class:`StreamScores` to reject scores
+        computed for a different trace."""
+
+        bounds = self.stream_bounds(stream_len)
+        starts = bounds[:-1]
+        if not len(starts):
+            z = np.zeros(0, dtype=np.int64)
+            return z, z.copy()
+        return (
+            np.add.reduceat(self.sizes, starts),
+            np.add.reduceat(self.offsets, starts),
+        )
+
     def stream_matrix(
         self, stream_len: int = DEFAULT_STREAM_LEN
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:

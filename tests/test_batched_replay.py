@@ -1,0 +1,316 @@
+"""Batched replay engine ≡ per-request oracle, plus flush-path bugfixes.
+
+The batched engine routes and accounts whole streams (no per-request
+Python on the SSD path); these tests assert its :class:`SimResult` is
+**bit-identical** to the per-request oracle on every scheme, including
+the hard corners: region swaps, blocked writers, plain-BB overflow,
+compute gaps, trailing partial streams, and both index backends.
+
+The bugfix sweep is locked in alongside:
+
+* compute-gap flushing continues through the backlog (not just the
+  current job);
+* flush time charges Eq. 6's residual seeks on every drain path;
+* ``SimResult.app_throughput_mbs`` guards ``io_seconds == 0``;
+* ``TwoRegionPipeline.drain()`` returns and forces backlog jobs.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Gap,
+    IONodeSimulator,
+    Request,
+    TraceBatch,
+    TwoRegionPipeline,
+    compute_stream_scores,
+    ior,
+    mixed,
+    relabel,
+)
+from repro.core.device_model import HDDModel
+from repro.core.workloads import GiB, MiB
+
+SMALL = 128 * MiB
+SCHEMES = ("orangefs", "orangefs-bb", "ssdup", "ssdup+")
+
+
+def assert_results_identical(a, b, context=""):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        assert va == vb, f"{context}{f.name}: {va!r} != {vb!r}"
+
+
+@pytest.fixture(scope="module")
+def mixed_trace():
+    w1 = relabel(ior("segmented-contiguous", 8, total_bytes=SMALL, seed=1),
+                 app_id=0, file_id=0)
+    w2 = relabel(ior("segmented-random", 8, total_bytes=SMALL, seed=2),
+                 app_id=1, file_id=1)
+    w3 = relabel(ior("strided", 32, total_bytes=SMALL, seed=3),
+                 app_id=2, file_id=2)
+    return list(mixed(w1, w2, w3, burst_requests=256).trace)
+
+
+@pytest.fixture(scope="module")
+def gapped_trace():
+    wa = relabel(ior("segmented-random", 16, total_bytes=SMALL, seed=5),
+                 app_id=0, file_id=0)
+    wb = relabel(ior("strided", 64, total_bytes=SMALL, seed=6),
+                 app_id=1, file_id=1)
+    # gaps mid-trace AND trailing, plus a partial final stream
+    return (
+        list(wa.trace) + [Gap(2.0)] + list(wb.trace)[:-37] + [Gap(7.5)]
+    )
+
+
+class TestEngineEquivalence:
+    """batched == per-request, field for field, bit for bit."""
+
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    def test_mixed_load(self, mixed_trace, scheme):
+        cap = SMALL  # constrained: forces swaps / blocks / BB overflow
+        a = IONodeSimulator(scheme=scheme, ssd_capacity=cap,
+                            engine="per-request").run(mixed_trace)
+        b = IONodeSimulator(scheme=scheme, ssd_capacity=cap,
+                            engine="batched").run(mixed_trace)
+        assert_results_identical(a, b, f"{scheme}: ")
+
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    def test_gaps_and_partial_tail(self, gapped_trace, scheme):
+        cap = SMALL // 2
+        a = IONodeSimulator(scheme=scheme, ssd_capacity=cap,
+                            engine="per-request").run(gapped_trace)
+        b = IONodeSimulator(scheme=scheme, ssd_capacity=cap,
+                            engine="batched").run(gapped_trace)
+        assert_results_identical(a, b, f"{scheme}: ")
+
+    @pytest.mark.parametrize("index_backend", ["avl", "numpy"])
+    def test_index_backends_identical(self, mixed_trace, index_backend):
+        """Either backend under either engine: same SimResult."""
+
+        cap = SMALL
+        ref = IONodeSimulator(scheme="ssdup+", ssd_capacity=cap,
+                              engine="per-request",
+                              index_backend="avl").run(mixed_trace)
+        got = IONodeSimulator(scheme="ssdup+", ssd_capacity=cap,
+                              engine="batched",
+                              index_backend=index_backend).run(mixed_trace)
+        assert_results_identical(ref, got, f"{index_backend}: ")
+
+    def test_trace_batch_input_equivalent(self, mixed_trace):
+        """run() accepts a TraceBatch directly (the fleet hot path)."""
+
+        batch = TraceBatch.from_items(mixed_trace)
+        a = IONodeSimulator(scheme="ssdup+", ssd_capacity=SMALL).run(mixed_trace)
+        b = IONodeSimulator(scheme="ssdup+", ssd_capacity=SMALL).run(batch)
+        assert_results_identical(a, b)
+
+    def test_precomputed_scores_equivalent(self, mixed_trace):
+        scores = compute_stream_scores(mixed_trace)
+        a = IONodeSimulator(scheme="ssdup+", ssd_capacity=SMALL).run(
+            mixed_trace)
+        b = IONodeSimulator(scheme="ssdup+", ssd_capacity=SMALL).run(
+            mixed_trace, scores=scores)
+        assert_results_identical(a, b)
+
+    def test_unknown_engine_rejected(self):
+        with pytest.raises(ValueError, match="engine"):
+            IONodeSimulator(engine="turbo")
+
+
+class TestGapBacklogDrain:
+    """Bugfix: a compute gap keeps draining into the flush backlog."""
+
+    def _sim_with_two_full_regions(self):
+        cap = 8 * MiB
+        sim = IONodeSimulator(scheme="ssdup+", ssd_capacity=cap)
+        rng = np.random.default_rng(0)
+        for region in sim.pipeline.regions:
+            # discontiguous 64 KiB extents -> residual seeks > 0
+            for i, slot in enumerate(rng.permutation(2 * (cap // 2) // (64 << 10))[
+                    : (cap // 2) // (64 << 10)]):
+                region.append(0, int(slot) * (128 << 10), 64 << 10)
+        sim.pipeline.drain()  # job on R0, backlog holds R1
+        assert sim.pipeline.flush_job is not None
+        assert len(sim.pipeline._flush_backlog) == 1
+        return sim
+
+    def test_long_gap_drains_both_regions(self):
+        sim = self._sim_with_two_full_regions()
+        jobs = sim.pipeline.drain()
+        need = sum(j.service_seconds(sim.hdd) for j in jobs)
+        res = sim.run([Gap(need * 2)])
+        assert sim.pipeline.buffered_bytes == 0
+        assert res.flushes == 2
+        assert res.io_seconds == 0.0
+        assert res.total_seconds == pytest.approx(need * 2)
+
+    def test_short_gap_progress_is_not_discarded(self):
+        """The gap budget left after finishing job 1 must flow into job 2."""
+
+        sim = self._sim_with_two_full_regions()
+        job1 = sim.pipeline.flush_job
+        rate1 = job1.effective_rate(sim.hdd)
+        t1 = job1.bytes_total / rate1
+        extra = t1 / 2
+        sim.run([Gap(t1 + extra)])
+        # job 1 completed AND job 2 absorbed the leftover budget
+        assert sim.pipeline.flushes_completed >= 2  # finalize drains the rest
+        # the stronger check: before finalize, progress carried over — use
+        # the pipeline state mid-run via a fresh sim and _gap directly
+        sim2 = self._sim_with_two_full_regions()
+        job1 = sim2.pipeline.flush_job
+        rate1 = job1.effective_rate(sim2.hdd)
+        t1 = job1.bytes_total / rate1
+        from repro.core.simulator import _ReplayState
+
+        st = _ReplayState()
+        sim2._gap(st, t1 + extra)
+        assert sim2.pipeline.flushes_completed == 1
+        job2 = sim2.pipeline.flush_job
+        assert job2 is not None
+        expected = int(job2.effective_rate(sim2.hdd) * (t1 + extra - t1))
+        assert job2.bytes_done == pytest.approx(expected, abs=2)
+
+
+class TestEq6FlushCost:
+    """Bugfix: residual seeks are charged on every flush drain path."""
+
+    def test_service_seconds_formula(self):
+        hdd = HDDModel()
+        p = TwoRegionPipeline(1 << 20)
+        p.regions[0].append(0, 0, 4096)
+        p.regions[0].append(0, 65536, 4096)  # gap -> 2 residual seeks
+        jobs = p.drain()
+        job = jobs[0]
+        assert job.seeks == 2
+        assert job.service_seconds(hdd) == pytest.approx(
+            2 * hdd.seek_time + 8192 / hdd.seq_bw
+        )
+        assert job.effective_rate(hdd) < hdd.seq_bw
+
+    def test_final_drain_charges_seeks(self):
+        """An end-of-trace drain is slower than bytes/seq_bw alone."""
+
+        sim = IONodeSimulator(scheme="ssdup+", ssd_capacity=8 * MiB)
+        region = sim.pipeline.regions[0]
+        n, sz = 32, 64 << 10
+        for i in range(n):
+            region.append(0, i * 2 * sz, sz)  # every extent discontiguous
+        res = sim.run([])
+        expected = n * sim.hdd.seek_time + n * sz / sim.hdd.seq_bw
+        assert res.total_seconds == pytest.approx(expected)
+        assert res.total_seconds > n * sz / sim.hdd.seq_bw
+
+    def test_blocked_writer_drain_charges_seeks(self):
+        """drain_current_flush (writer blocked) pays Eq. 6 too."""
+
+        sim = IONodeSimulator(scheme="ssdup+", ssd_capacity=8 * MiB)
+        region = sim.pipeline.regions[0]
+        n, sz = 16, 64 << 10
+        for i in range(n):
+            region.append(0, i * 2 * sz, sz)
+        sim.pipeline.drain()
+        job = sim.pipeline.flush_job
+        from repro.core.simulator import _ReplayState
+
+        st = _ReplayState()
+        dt = sim._drain_current_flush(st)
+        assert dt == pytest.approx(job.service_seconds(sim.hdd))
+        assert dt > job.bytes_total / sim.hdd.seq_bw
+
+
+class TestAppThroughputGuard:
+    """Bugfix: io_seconds == 0 must not raise ZeroDivisionError."""
+
+    def test_gap_only_trace(self):
+        res = IONodeSimulator(scheme="ssdup+").run([Gap(5.0)])
+        assert res.io_seconds == 0.0
+        assert res.throughput_mbs == 0.0
+        assert res.app_throughput_mbs(0) == 0.0  # raised before the fix
+
+    def test_empty_trace(self):
+        res = IONodeSimulator(scheme="orangefs").run([])
+        assert res.app_throughput_mbs(42) == 0.0
+
+    def test_nonzero_path_unchanged(self):
+        w = ior("strided", 16, total_bytes=16 * MiB)
+        res = IONodeSimulator(scheme="orangefs").run(list(w.trace))
+        assert res.app_throughput_mbs(0) == pytest.approx(
+            res.per_app_bytes[0] / res.io_seconds / 1e6
+        )
+
+
+class TestDrainReturnsBacklog:
+    """Bugfix: drain() returns and forces the backlog jobs too."""
+
+    def test_all_jobs_returned_and_forced(self):
+        p = TwoRegionPipeline(1 << 20)
+        p.regions[0].append(0, 0, 1000)
+        p.regions[1].append(1, 0, 2000)
+        jobs = p.drain()
+        assert len(jobs) == 2
+        assert all(j.forced for j in jobs)
+        assert {j.region for j in jobs} == set(p.regions)
+        # draining the returned jobs empties everything with no extra force
+        for job in jobs:
+            assert p.flush_job is job
+            p.flush_progress(job.bytes_left)
+        assert p.flush_job is None
+        assert p.buffered_bytes == 0
+        assert p.flushes_completed == 2
+
+    def test_drain_idempotent(self):
+        p = TwoRegionPipeline(1 << 20)
+        p.regions[0].append(0, 0, 1000)
+        assert len(p.drain()) == 1
+        assert len(p.drain()) == 1  # re-drain does not double-schedule
+
+
+@pytest.mark.slow
+class TestMillionRequestReplay:
+    """The batched engine at the scale the seed could not reach."""
+
+    def test_million_request_trace_replays_and_conserves(self):
+        rng = np.random.default_rng(7)
+        n = 1_000_000
+        sz = 64 << 10
+        batch = TraceBatch(
+            offsets=rng.integers(0, 1 << 38, size=n).astype(np.int64),
+            sizes=np.full(n, sz, dtype=np.int64),
+            file_ids=rng.integers(0, 8, size=n).astype(np.int64),
+            app_ids=rng.integers(0, 4, size=n).astype(np.int64),
+            times=np.zeros(n),
+            gap_positions=np.asarray([n // 2], dtype=np.int64),
+            gap_seconds=np.asarray([30.0]),
+        )
+        res = IONodeSimulator(scheme="ssdup+", ssd_capacity=4 * GiB).run(batch)
+        assert res.total_bytes == n * sz
+        assert res.bytes_to_ssd + res.bytes_to_hdd_direct == res.total_bytes
+        assert res.io_seconds > 0
+        assert sum(res.per_app_bytes.values()) == res.total_bytes
+
+    def test_large_trace_matches_oracle(self):
+        """100k-request spot check of bit-exactness at scale."""
+
+        rng = np.random.default_rng(11)
+        n = 100_000
+        reqs = [
+            Request(offset=int(o), size=256 << 10, file_id=int(f),
+                    app_id=int(ap))
+            for o, f, ap in zip(
+                rng.integers(0, 1 << 34, size=n),
+                rng.integers(0, 4, size=n),
+                rng.integers(0, 2, size=n),
+            )
+        ]
+        cap = 2 * GiB
+        a = IONodeSimulator(scheme="ssdup+", ssd_capacity=cap,
+                            engine="per-request").run(reqs)
+        b = IONodeSimulator(scheme="ssdup+", ssd_capacity=cap,
+                            engine="batched").run(reqs)
+        assert_results_identical(a, b)

@@ -1,0 +1,163 @@
+"""ExtentIndex ≡ AVLTree: the vectorized index must be a bit-exact drop-in.
+
+The batched replay engine swaps the paper's AVL tree (§2.5) for the
+columnar :class:`repro.core.extent_index.ExtentIndex`; these property
+tests drive both through overwrite-heavy random workloads and assert the
+full query surface agrees — ``in_order``, ``in_order_arrays``,
+``flush_bytes``-style size sums, seek counts, ``lookup``, ``len``,
+``min_key``/``max_key``, ``approx_bytes``.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic no-shrink fallback, same API surface
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import AVLTree, ExtentIndex, LogRegion, make_index
+from repro.core.extent_index import INDEX_BACKENDS
+
+
+def _populate(items):
+    """Feed the same (offset, size) sequence to both backends."""
+
+    avl, idx = AVLTree(), ExtentIndex()
+    for log_off, (slot, size) in enumerate(items):
+        off = slot * 8  # small key space => heavy overwriting
+        avl.insert(off, size, log_off * 64)
+        idx.insert(off, size, log_off * 64)
+    return avl, idx
+
+
+def _assert_equal(avl: AVLTree, idx: ExtentIndex, keys) -> None:
+    assert len(idx) == len(avl)
+    assert idx.min_key() == avl.min_key()
+    assert idx.max_key() == avl.max_key()
+    assert idx.approx_bytes() == avl.approx_bytes()
+    a_ext = list(avl.in_order())
+    b_ext = list(idx.in_order())
+    assert a_ext == b_ext  # offsets, sizes AND log offsets, in flush order
+    offs, szs, logs = idx.in_order_arrays()
+    assert offs.tolist() == [e.offset for e in a_ext]
+    assert szs.tolist() == [e.size for e in a_ext]
+    assert logs.tolist() == [e.log_offset for e in a_ext]
+    ao, asz, al = avl.in_order_arrays()
+    np.testing.assert_array_equal(offs, ao)
+    np.testing.assert_array_equal(szs, asz)
+    np.testing.assert_array_equal(logs, al)
+    for k in keys:
+        assert idx.lookup(k) == avl.lookup(k)
+    assert idx.lookup(-1) is None and avl.lookup(-1) is None
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 40), st.integers(1, 64)),
+        min_size=0,
+        max_size=300,
+    )
+)
+def test_property_extent_index_matches_avl(items):
+    """Overwrite-heavy random workloads: every query answer matches."""
+
+    avl, idx = _populate(items)
+    _assert_equal(avl, idx, keys=[slot * 8 for slot, _ in items])
+
+
+@settings(max_examples=75, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 40), st.integers(1, 64)),
+        min_size=1,
+        max_size=200,
+    ),
+    st.integers(1, 50),
+)
+def test_property_interleaved_scalar_and_batch_inserts(items, split):
+    """Mixing insert() and insert_batch() must behave like the same
+    arrival sequence fed scalar-only to the AVL oracle."""
+
+    split = min(split, len(items))
+    avl = AVLTree()
+    idx = ExtentIndex()
+    for log_off, (slot, size) in enumerate(items):
+        avl.insert(slot * 8, size, log_off * 64)
+    head, tail = items[:split], items[split:]
+    for log_off, (slot, size) in enumerate(head):
+        idx.insert(slot * 8, size, log_off * 64)
+    if tail:
+        offs = np.asarray([slot * 8 for slot, _ in tail], dtype=np.int64)
+        szs = np.asarray([size for _, size in tail], dtype=np.int64)
+        logs = np.arange(split, len(items), dtype=np.int64) * 64
+        idx.insert_batch(offs, szs, logs)
+    _assert_equal(avl, idx, keys=[slot * 8 for slot, _ in items])
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 50), st.integers(1, 16)),
+        min_size=1,
+        max_size=200,
+    )
+)
+def test_property_log_region_backends_agree(items):
+    """LogRegion flush accounting is backend-independent: flush order,
+    live bytes, metadata and residual seek counts all match."""
+
+    regions = {b: LogRegion(1 << 20, index_backend=b) for b in INDEX_BACKENDS}
+    for fid, slot, size in items:
+        for r in regions.values():
+            r.append(fid, slot * 64, size)
+    a, b = regions["avl"], regions["numpy"]
+    assert list(a.flush_order()) == list(b.flush_order())
+    assert a.flush_bytes() == b.flush_bytes()
+    assert a.metadata_bytes() == b.metadata_bytes()
+    assert a.seek_count_sorted() == b.seek_count_sorted()
+    assert a.seek_count_if_unsorted() == b.seek_count_if_unsorted()
+
+
+class TestExtentIndexBasics:
+    def test_empty(self):
+        idx = ExtentIndex()
+        assert len(idx) == 0
+        assert idx.min_key() is None and idx.max_key() is None
+        assert idx.lookup(0) is None
+        assert list(idx.in_order()) == []
+        assert idx.approx_bytes() == 0
+
+    def test_latest_version_wins(self):
+        idx = ExtentIndex()
+        idx.insert(100, 10, 0)
+        idx.insert(100, 12, 40)  # newer log copy supersedes
+        assert len(idx) == 1
+        ext = idx.lookup(100)
+        assert (ext.size, ext.log_offset) == (12, 40)
+
+    def test_batch_then_query_then_insert_invalidates_cache(self):
+        idx = ExtentIndex()
+        idx.insert_batch(
+            np.array([30, 10, 20]), np.array([1, 1, 1]), np.array([0, 1, 2])
+        )
+        assert [e.offset for e in idx.in_order()] == [10, 20, 30]
+        idx.insert(10, 5, 99)  # overwrite after a cached compaction
+        assert idx.lookup(10).log_offset == 99
+        assert len(idx) == 3
+
+    def test_clear(self):
+        idx = ExtentIndex()
+        idx.insert(1, 1, 0)
+        idx.clear()
+        assert len(idx) == 0 and idx.lookup(1) is None
+
+    def test_make_index_rejects_unknown(self):
+        with pytest.raises(ValueError, match="index_backend"):
+            make_index("btree")
+
+    def test_make_index_backends(self):
+        assert isinstance(make_index("numpy"), ExtentIndex)
+        assert isinstance(make_index("avl"), AVLTree)

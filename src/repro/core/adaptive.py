@@ -91,6 +91,21 @@ class AdaptiveThreshold:
     def observe_many(self, percentages: Iterable[float]) -> list[float]:
         return [self.observe(p) for p in percentages]
 
+    def seed(self, percentages: Iterable[float]) -> "AdaptiveThreshold":
+        """Pre-populate PercentList with history before replay starts.
+
+        Models a detector whose history is warm at t=0 — e.g. a
+        fleet-scope PercentList shared across I/O servers
+        (``FleetSimulator(threshold_scope="fleet")``) where each node
+        starts from the global stream history instead of a cold default.
+        Windowed instances keep only the last ``window`` entries, exactly
+        as if the history had been observed live.
+        """
+
+        for p in percentages:
+            self.observe(p)
+        return self
+
     # -- queries ----------------------------------------------------------
     @property
     def threshold(self) -> float:
@@ -142,6 +157,14 @@ class StaticWatermarkThreshold:
         elif percentage < self.low:
             self._last_random = False
         return self.threshold
+
+    def seed(self, percentages: Iterable[float]) -> "StaticWatermarkThreshold":
+        """Warm-start counterpart of :meth:`AdaptiveThreshold.seed` — only
+        the final hysteresis state survives (watermarks keep no list)."""
+
+        for p in percentages:
+            self.observe(p)
+        return self
 
     @property
     def threshold(self) -> float:

@@ -122,6 +122,17 @@ class FleetSimulator:
     score_backend:
         Backend for the up-front batched stream scoring: ``"numpy"``
         (exact, default), ``"jnp"``, or ``"pallas"``.
+    threshold_scope:
+        ``"node"`` (default): every node's detector starts cold and only
+        ever observes its own shard's streams — the deployment where each
+        I/O server runs an independent SSDUP+ daemon.  ``"fleet"``: each
+        node's PercentList is warm-started with the *global* trace's
+        stream-percentage history (in arrival order) before replay,
+        modeling a fleet-scope detector whose history is shared across
+        servers.  During replay each node still evolves independently;
+        live cross-node coupling would need a merged arrival timeline.
+        Used by ``experiments/anomaly_hunt.py`` to separate per-shard
+        threshold-state effects from trace-composition effects.
     """
 
     def __init__(
@@ -131,10 +142,22 @@ class FleetSimulator:
         policy: str = "round-robin-app",
         stream_len: int = DEFAULT_STREAM_LEN,
         score_backend: str = "numpy",
+        threshold_scope: str = "node",
         **node_kwargs,
     ):
         if num_nodes < 1:
             raise ValueError(f"num_nodes must be >= 1, got {num_nodes}")
+        if threshold_scope not in ("node", "fleet"):
+            raise ValueError(
+                f"threshold_scope must be 'node' or 'fleet', "
+                f"got {threshold_scope!r}"
+            )
+        if threshold_scope == "fleet" and "threshold_warmup" in node_kwargs:
+            raise ValueError(
+                "threshold_scope='fleet' derives each node's "
+                "threshold_warmup from the global trace; passing an "
+                "explicit threshold_warmup is ambiguous"
+            )
         if policy not in TRACE_POLICIES:
             raise ValueError(
                 f"unknown policy {policy!r}; choose from {sorted(TRACE_POLICIES)}"
@@ -149,6 +172,7 @@ class FleetSimulator:
         self.policy = policy
         self.stream_len = stream_len
         self.score_backend = score_backend
+        self.threshold_scope = threshold_scope
         self.node_kwargs = node_kwargs
 
     # ------------------------------------------------------------------
@@ -166,6 +190,15 @@ class FleetSimulator:
             trace if isinstance(trace, TraceBatch) else TraceBatch.from_items(trace)
         )
         shards = self.shard(batch)
+        node_kwargs = dict(self.node_kwargs)
+        if self.threshold_scope == "fleet" and self.scheme in ("ssdup",
+                                                               "ssdup+"):
+            global_scores = compute_stream_scores(
+                batch, self.stream_len, backend=self.score_backend
+            )
+            node_kwargs["threshold_warmup"] = tuple(
+                float(p) for p in global_scores.percentage
+            )
         results = []
         for shard in shards:
             scores = compute_stream_scores(
@@ -173,7 +206,7 @@ class FleetSimulator:
             )
             node = IONodeSimulator(
                 scheme=self.scheme, stream_len=self.stream_len,
-                **self.node_kwargs,
+                **node_kwargs,
             )
             # shards stay columnar end-to-end: the batched replay engine
             # consumes the TraceBatch directly (no item materialization)

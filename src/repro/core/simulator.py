@@ -158,11 +158,17 @@ class IONodeSimulator:
         adaptive_window: int | None = 64,
         index_backend: str = "numpy",
         engine: str = "batched",
+        threshold_warmup: Sequence[float] | None = None,
     ):
         if scheme not in ("orangefs", "orangefs-bb", "ssdup", "ssdup+"):
             raise ValueError(f"unknown scheme {scheme}")
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+        if threshold_warmup is not None and scheme not in ("ssdup", "ssdup+"):
+            raise ValueError(
+                "threshold_warmup requires a threshold scheme "
+                f"(ssdup/ssdup+), got {scheme!r}"
+            )
         self.scheme = scheme
         self.engine = engine
         self.hdd = hdd or HDDModel()
@@ -199,6 +205,12 @@ class IONodeSimulator:
         else:  # orangefs
             self.pipeline = None  # type: ignore[assignment]
             self.redirector = None
+
+        if threshold_warmup is not None and self.redirector is not None:
+            # warm detector history (e.g. fleet-scope PercentList) — seeded
+            # before replay so the first stream already sees an adapted
+            # threshold instead of the cold default
+            self.redirector.policy.seed(threshold_warmup)
 
     # -- shared timing primitives (both engines) -----------------------
     def _advance_fg(

@@ -1,0 +1,71 @@
+"""Differential-testing and regression-gating infrastructure.
+
+* :mod:`repro.testing.traces` — the deterministic golden-trace protocol:
+  named canonical workloads rebuilt from fixed seeds, plus a content
+  fingerprint so trace drift (RNG/protocol changes) is distinguished
+  from replay-engine drift.
+* :mod:`repro.testing.golden` — the golden-fixture store: serialized
+  ``SimResult``/``FleetResult`` snapshots committed under
+  ``tests/golden/``, and a diff reporter that names the *first* diverging
+  field in causal order (routing before byte accounting before clocks).
+* :mod:`repro.testing.perf` — the BENCH perf-trajectory artifact
+  (``experiments/BENCH_<n>.json``): per-suite timings, speedup vs the
+  previous anchor, and a +/-15% regression gate used by
+  ``python -m benchmarks.run --check``.
+"""
+
+from .golden import (
+    CAUSAL_FIELD_ORDER,
+    GOLDEN_DIR,
+    GoldenTraceMismatch,
+    diff_fleet,
+    diff_sim,
+    first_divergence,
+    fixture_name,
+    fixture_path,
+    fleet_result_to_dict,
+    generate_all,
+    load_fixture,
+    make_fixture,
+    replay_fixture,
+    sim_result_to_dict,
+)
+from .perf import (
+    CURRENT_INDEX,
+    REGRESSION_THRESHOLD,
+    atomic_write_text,
+    bench_filename,
+    build_trajectory,
+    check_trajectory,
+    emit_trajectory,
+    find_anchor,
+)
+from .traces import GOLDEN_WORKLOADS, golden_trace, trace_fingerprint
+
+__all__ = [
+    "CAUSAL_FIELD_ORDER",
+    "CURRENT_INDEX",
+    "GOLDEN_DIR",
+    "GOLDEN_WORKLOADS",
+    "GoldenTraceMismatch",
+    "REGRESSION_THRESHOLD",
+    "atomic_write_text",
+    "bench_filename",
+    "build_trajectory",
+    "check_trajectory",
+    "diff_fleet",
+    "diff_sim",
+    "emit_trajectory",
+    "find_anchor",
+    "first_divergence",
+    "fixture_name",
+    "fixture_path",
+    "fleet_result_to_dict",
+    "generate_all",
+    "golden_trace",
+    "load_fixture",
+    "make_fixture",
+    "replay_fixture",
+    "sim_result_to_dict",
+    "trace_fingerprint",
+]

@@ -1,0 +1,302 @@
+"""Golden-fixture store + first-divergence diff reporter.
+
+A fixture pins one ``(scheme x workload x shard-policy x engine)`` fleet
+replay: the trace is rebuilt from :mod:`repro.testing.traces` (never
+stored), the expected :class:`FleetResult` is stored field-by-field as
+JSON.  Python floats round-trip exactly through JSON (``repr`` is
+shortest-round-trip), so fixture comparison is bit-exact — any drift in
+either replay engine, either extent-index backend, the scoring path, or
+the timing model trips a golden test.
+
+The diff reporter walks fields in **causal order** — routing inputs
+before byte accounting before flush counters before clocks — across all
+nodes, so the first reported divergence is the causally-earliest effect,
+not whichever field happens to sort first::
+
+    node[3].bytes_to_ssd: expected 148897792, got 148635648
+
+Regenerate fixtures after an *intentional* behavior change with::
+
+    PYTHONPATH=src python -m repro.testing.golden --write
+
+and review the fixture diff like any other code diff.  ``--check``
+replays every committed fixture and exits nonzero on the first
+divergence (same check the golden tests run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Sequence
+
+from repro.core import FleetSimulator, FleetResult, SimResult
+
+from .traces import golden_trace, trace_fingerprint
+
+SCHEMA = "golden-fixture/v1"
+
+# repo-root/tests/golden (this file lives at src/repro/testing/golden.py)
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parents[3] / "tests" / "golden"
+
+# Causally ordered SimResult fields: a divergence in an earlier field
+# explains divergences in later ones (routing decides bytes, bytes decide
+# flush quanta, flush quanta decide clocks), so the reporter scans in
+# this order and names the first mismatch.
+CAUSAL_FIELD_ORDER = (
+    "scheme",
+    "total_bytes",
+    "per_app_bytes",
+    "bytes_to_ssd",
+    "bytes_to_hdd_direct",
+    "metadata_bytes",
+    "flushes",
+    "peak_ssd_occupancy",
+    "blocked_seconds",
+    "flush_paused_seconds",
+    "io_seconds",
+    "total_seconds",
+)
+
+# The committed fixture matrix (acceptance floor: >=3 schemes x 2
+# workloads x 2 policies).  Engines: fixtures are generated with the
+# default batched engine; tests replay them under the per-request oracle
+# and the AVL index too, which pins all four engine/backend combinations
+# to one snapshot instead of committing near-duplicate files.
+FIXTURE_SCHEMES = ("orangefs", "orangefs-bb", "ssdup", "ssdup+")
+FIXTURE_WORKLOADS = ("mixed-burst", "strided-gaps")
+FIXTURE_POLICIES = ("range-offset", "round-robin-app")
+FIXTURE_NODES = 4
+
+
+class GoldenTraceMismatch(AssertionError):
+    """The rebuilt trace does not match the fixture's fingerprint —
+    the *trace protocol* drifted (RNG stream, workload generator), not
+    the replay engine."""
+
+
+# -- serialization -----------------------------------------------------
+
+
+def sim_result_to_dict(r: SimResult) -> dict:
+    return {
+        "scheme": r.scheme,
+        "total_bytes": int(r.total_bytes),
+        "per_app_bytes": {str(k): int(v)
+                          for k, v in sorted(r.per_app_bytes.items())},
+        "bytes_to_ssd": int(r.bytes_to_ssd),
+        "bytes_to_hdd_direct": int(r.bytes_to_hdd_direct),
+        "metadata_bytes": int(r.metadata_bytes),
+        "flushes": int(r.flushes),
+        "peak_ssd_occupancy": int(r.peak_ssd_occupancy),
+        "blocked_seconds": float(r.blocked_seconds),
+        "flush_paused_seconds": float(r.flush_paused_seconds),
+        "io_seconds": float(r.io_seconds),
+        "total_seconds": float(r.total_seconds),
+    }
+
+
+def fleet_result_to_dict(fr: FleetResult) -> dict:
+    return {
+        "scheme": fr.scheme,
+        "policy": fr.policy,
+        "num_nodes": int(fr.num_nodes),
+        "nodes": [sim_result_to_dict(r) for r in fr.node_results],
+    }
+
+
+# -- diff reporter -----------------------------------------------------
+
+
+def _normalize(field: str, value):
+    if field == "per_app_bytes":
+        return {str(k): int(v) for k, v in dict(value).items()}
+    return value
+
+
+def diff_sim(expected: dict, actual: dict, prefix: str = "") -> list[str]:
+    """All diverging SimResult fields, causally ordered."""
+
+    out = []
+    for field in CAUSAL_FIELD_ORDER:
+        e = _normalize(field, expected[field])
+        a = _normalize(field, actual[field])
+        if e != a:
+            out.append(f"{prefix}{field}: expected {e!r}, got {a!r}")
+    return out
+
+def diff_fleet(expected: dict, actual: dict) -> list[str]:
+    """Diverging fields across a fleet snapshot, causally ordered.
+
+    Field-major scan: a routing divergence on *any* node is reported
+    before a clock divergence on any other, because the former causes
+    the latter.
+    """
+
+    out = []
+    for field in ("scheme", "policy", "num_nodes"):
+        if expected[field] != actual[field]:
+            out.append(
+                f"{field}: expected {expected[field]!r}, "
+                f"got {actual[field]!r}"
+            )
+    exp_nodes, act_nodes = expected["nodes"], actual["nodes"]
+    if len(exp_nodes) != len(act_nodes):
+        out.append(
+            f"nodes: expected {len(exp_nodes)} results, got {len(act_nodes)}"
+        )
+        return out
+    for field in CAUSAL_FIELD_ORDER:
+        for i, (e, a) in enumerate(zip(exp_nodes, act_nodes)):
+            ef, af = _normalize(field, e[field]), _normalize(field, a[field])
+            if ef != af:
+                out.append(
+                    f"node[{i}].{field}: expected {ef!r}, got {af!r}"
+                )
+    return out
+
+
+def first_divergence(expected: dict, actual: dict) -> str | None:
+    """The causally-first diverging field of a fleet snapshot, or None."""
+
+    diffs = diff_fleet(expected, actual)
+    return diffs[0] if diffs else None
+
+
+# -- fixture store -----------------------------------------------------
+
+
+def fixture_name(scheme: str, workload: str, policy: str,
+                 engine: str = "batched") -> str:
+    return f"{scheme}__{workload}__{policy}__{engine}.json"
+
+
+def fixture_path(scheme: str, workload: str, policy: str,
+                 engine: str = "batched",
+                 directory: pathlib.Path | None = None) -> pathlib.Path:
+    return (directory or GOLDEN_DIR) / fixture_name(
+        scheme, workload, policy, engine)
+
+
+def _node_capacity(total_bytes: int) -> int:
+    # half the per-node share of the trace: forces region swaps, writer
+    # blocking, and eager flushes on every buffered scheme
+    return total_bytes // FIXTURE_NODES // 2
+
+
+def make_fixture(scheme: str, workload: str, policy: str,
+                 engine: str = "batched") -> dict:
+    """Run one fixture configuration and build its JSON payload."""
+
+    batch = golden_trace(workload)
+    fr = _run(batch, scheme, policy, engine)
+    return {
+        "schema": SCHEMA,
+        "key": {
+            "scheme": scheme,
+            "workload": workload,
+            "policy": policy,
+            "engine": engine,
+            "num_nodes": FIXTURE_NODES,
+            "ssd_capacity": _node_capacity(batch.total_bytes),
+        },
+        "trace": trace_fingerprint(batch),
+        "result": fleet_result_to_dict(fr),
+    }
+
+
+def _run(batch, scheme: str, policy: str, engine: str,
+         index_backend: str = "numpy") -> FleetResult:
+    return FleetSimulator(
+        num_nodes=FIXTURE_NODES,
+        scheme=scheme,
+        policy=policy,
+        ssd_capacity=_node_capacity(batch.total_bytes),
+        engine=engine,
+        index_backend=index_backend,
+    ).run(batch)
+
+
+def load_fixture(path: pathlib.Path) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != SCHEMA:
+        raise ValueError(
+            f"{path}: schema {payload.get('schema')!r}, expected {SCHEMA!r}"
+        )
+    return payload
+
+
+def replay_fixture(payload: dict, engine: str | None = None,
+                   index_backend: str = "numpy") -> FleetResult:
+    """Rebuild the fixture's trace and replay its configuration.
+
+    ``engine``/``index_backend`` may override the fixture's own (that is
+    how one snapshot pins the per-request oracle and the AVL index).
+    Raises :class:`GoldenTraceMismatch` if the rebuilt trace does not
+    match the stored fingerprint.
+    """
+
+    key = payload["key"]
+    batch = golden_trace(key["workload"])
+    fp = trace_fingerprint(batch)
+    if fp != payload["trace"]:
+        raise GoldenTraceMismatch(
+            f"golden trace {key['workload']!r} drifted: rebuilt "
+            f"fingerprint {fp} != stored {payload['trace']} — the trace "
+            "protocol changed (RNG stream or generator), not the engine"
+        )
+    return _run(batch, key["scheme"], key["policy"],
+                engine or key["engine"], index_backend)
+
+
+def check_fixture(payload: dict, result: FleetResult) -> list[str]:
+    return diff_fleet(payload["result"], fleet_result_to_dict(result))
+
+
+def generate_all(directory: pathlib.Path | None = None,
+                 schemes: Sequence[str] = FIXTURE_SCHEMES,
+                 workloads: Sequence[str] = FIXTURE_WORKLOADS,
+                 policies: Sequence[str] = FIXTURE_POLICIES) -> list[pathlib.Path]:
+    directory = directory or GOLDEN_DIR
+    directory.mkdir(parents=True, exist_ok=True)
+    written = []
+    for workload in workloads:
+        for scheme in schemes:
+            for policy in policies:
+                payload = make_fixture(scheme, workload, policy)
+                path = directory / fixture_name(scheme, workload, policy)
+                path.write_text(
+                    json.dumps(payload, indent=1, sort_keys=True) + "\n")
+                written.append(path)
+    return written
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="golden-fixture store: regenerate or verify")
+    ap.add_argument("--write", action="store_true",
+                    help="(re)generate every fixture under tests/golden/")
+    ap.add_argument("--check", action="store_true",
+                    help="replay committed fixtures; nonzero on divergence")
+    args = ap.parse_args(argv)
+    if args.write:
+        for path in generate_all():
+            print(f"wrote {path}")
+        return 0
+    if args.check:
+        bad = 0
+        for path in sorted(GOLDEN_DIR.glob("*__*.json")):
+            payload = load_fixture(path)
+            diffs = check_fixture(payload, replay_fixture(payload))
+            status = diffs[0] if diffs else "ok"
+            print(f"{path.name}: {status}")
+            bad += bool(diffs)
+        return 1 if bad else 0
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,100 @@
+"""The 8-16 node SSDUP+ shortfall, pinned to a minimal committed fixture.
+
+``tests/golden/anomaly_16n_straggler.json`` holds the literal straggler
+shard (node 7 of 16, range-offset) of the fleet benchmark's 2 GiB mix.
+The mechanism (experiments/ANOMALY.md): the last stream's percentage
+(0.512) sits just above the default traffic-aware flush gate (0.5), so
+the flusher runs concurrently for the stream's whole wall — but that
+stream is itself routed to the *HDD* (one-stream-lag threshold 0.425),
+so the "high percentage => slow tier idle" premise is violated and the
+entire foreground device time is inflated 4x (Eq. 7, phi=2).  Raising
+the gate to 0.75 defers the flush and removes the inflation without
+changing a single routing decision.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core import IONodeSimulator, TraceBatch, compute_stream_scores
+from repro.core.random_factor import Request
+from repro.testing.golden import GOLDEN_DIR, diff_sim, sim_result_to_dict
+
+FIXTURE = GOLDEN_DIR / "anomaly_16n_straggler.json"
+
+
+@pytest.fixture(scope="module")
+def payload():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def shard(payload):
+    t = payload["trace"]
+    return TraceBatch.from_requests([
+        Request(offset=o, size=s, file_id=f, app_id=a)
+        for o, s, f, a in zip(t["offsets"], t["sizes"],
+                              t["file_ids"], t["app_ids"])
+    ])
+
+
+def _replay(payload, shard, scheme, **kwargs):
+    node = IONodeSimulator(scheme=scheme,
+                           ssd_capacity=payload["ssd_capacity"], **kwargs)
+    scores = compute_stream_scores(shard) if scheme != "orangefs" else None
+    result = node.run(shard, scores=scores)
+    decisions = None
+    if node.redirector is not None:
+        decisions = [[float(p), float(t), d.name.lower()]
+                     for p, t, d in node.redirector.decisions]
+    return result, decisions
+
+
+@pytest.mark.parametrize("key,scheme,kwargs", [
+    ("orangefs", "orangefs", {}),
+    ("ssdup+_gate0.5", "ssdup+", {}),
+    ("ssdup+_gate0.75", "ssdup+", {"flush_gate": 0.75}),
+])
+def test_replay_matches_fixture(payload, shard, key, scheme, kwargs):
+    result, decisions = _replay(payload, shard, scheme, **kwargs)
+    expected = payload["expected"][key]
+    diffs = diff_sim(expected["result"], sim_result_to_dict(result))
+    assert diffs == [], "\n".join(diffs)
+    if expected.get("decisions") is not None:
+        assert decisions == expected["decisions"]
+
+
+def test_shortfall_reproduces(payload, shard):
+    """SSDUP+ at the default gate loses to no-buffer OrangeFS here."""
+
+    plus, _ = _replay(payload, shard, "ssdup+")
+    base, _ = _replay(payload, shard, "orangefs")
+    assert plus.io_seconds > base.io_seconds * 1.5
+
+
+def test_gate_raise_removes_inflation_without_rerouting(payload, shard):
+    """flush_gate=0.75 fixes the shard with identical routing decisions —
+    the shortfall is pure flush-gate self-interference, not a threshold
+    or routing defect."""
+
+    slow, slow_dec = _replay(payload, shard, "ssdup+")
+    fast, fast_dec = _replay(payload, shard, "ssdup+", flush_gate=0.75)
+    base, _ = _replay(payload, shard, "orangefs")
+    assert slow_dec == fast_dec
+    assert fast.bytes_to_ssd == slow.bytes_to_ssd
+    assert fast.io_seconds < base.io_seconds < slow.io_seconds
+
+
+def test_offending_stream_sits_between_gate_and_threshold(payload):
+    """The mechanism's signature: the last stream's percentage opens the
+    0.5 flush gate, yet the stream itself is on the HDD — the one-stream
+    routing lag sent it there even though its pct exceeds the threshold
+    in effect (the *next* stream would have gone to SSD)."""
+
+    decisions = payload["expected"]["ssdup+_gate0.5"]["decisions"]
+    pct, thr, device = decisions[-1]
+    assert device == "hdd"
+    assert pct >= 0.5            # opens the traffic-aware flush gate
+    assert pct > thr             # would have routed to SSD without lag

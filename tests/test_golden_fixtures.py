@@ -1,0 +1,132 @@
+"""Golden-fixture store: committed snapshots pin both replay engines,
+both index backends, and the diff reporter's first-divergence naming."""
+
+import copy
+
+import pytest
+
+from repro.testing import golden
+from repro.testing.golden import (
+    FIXTURE_POLICIES,
+    FIXTURE_SCHEMES,
+    FIXTURE_WORKLOADS,
+    GOLDEN_DIR,
+    GoldenTraceMismatch,
+    check_fixture,
+    first_divergence,
+    fixture_path,
+    fleet_result_to_dict,
+    load_fixture,
+    replay_fixture,
+)
+
+FIXTURE_FILES = sorted(GOLDEN_DIR.glob("*__*.json"))
+
+
+@pytest.fixture(scope="module")
+def payloads():
+    return {p.name: load_fixture(p) for p in FIXTURE_FILES}
+
+
+def test_fixture_matrix_complete():
+    """Acceptance floor: >= 3 schemes x 2 workloads x 2 policies."""
+
+    assert len(FIXTURE_SCHEMES) >= 3
+    assert len(FIXTURE_WORKLOADS) >= 2
+    assert len(FIXTURE_POLICIES) >= 2
+    for scheme in FIXTURE_SCHEMES:
+        for workload in FIXTURE_WORKLOADS:
+            for policy in FIXTURE_POLICIES:
+                assert fixture_path(scheme, workload, policy).exists()
+
+
+@pytest.mark.parametrize("path", FIXTURE_FILES, ids=lambda p: p.stem)
+def test_replay_matches_fixture(path, payloads):
+    payload = payloads[path.name]
+    diffs = check_fixture(payload, replay_fixture(payload))
+    assert diffs == [], f"{path.name} diverged:\n" + "\n".join(diffs)
+
+
+# The per-request oracle and the AVL index replay a subset (buffered
+# schemes exercise both pipelines); bit-exact equality against the
+# batched/numpy-generated snapshot pins all engine/backend combinations.
+_CROSS = [
+    (s, w, p)
+    for s in ("ssdup", "ssdup+", "orangefs-bb")
+    for w in FIXTURE_WORKLOADS
+    for p in ("range-offset",)
+]
+
+
+@pytest.mark.parametrize("scheme,workload,policy", _CROSS)
+def test_per_request_oracle_matches_fixture(scheme, workload, policy,
+                                            payloads):
+    payload = payloads[golden.fixture_name(scheme, workload, policy)]
+    diffs = check_fixture(
+        payload, replay_fixture(payload, engine="per-request"))
+    assert diffs == [], "\n".join(diffs)
+
+
+@pytest.mark.parametrize("scheme,workload,policy", _CROSS)
+def test_avl_index_matches_fixture(scheme, workload, policy, payloads):
+    payload = payloads[golden.fixture_name(scheme, workload, policy)]
+    diffs = check_fixture(
+        payload, replay_fixture(payload, index_backend="avl"))
+    assert diffs == [], "\n".join(diffs)
+
+
+class TestDiffReporter:
+    def test_perturbed_fixture_names_field(self, payloads):
+        payload = payloads[golden.fixture_name(
+            "ssdup+", "mixed-burst", "range-offset")]
+        actual = fleet_result_to_dict(replay_fixture(payload))
+        bad = copy.deepcopy(payload["result"])
+        bad["nodes"][2]["bytes_to_ssd"] += 512
+        msg = first_divergence(bad, actual)
+        assert msg is not None
+        assert msg.startswith("node[2].bytes_to_ssd: ")
+
+    def test_causal_order_reports_routing_before_clocks(self, payloads):
+        """A routing divergence must be named before a clock divergence,
+        even on a later node — clocks are downstream of routing."""
+
+        payload = payloads[golden.fixture_name(
+            "ssdup+", "mixed-burst", "range-offset")]
+        actual = fleet_result_to_dict(replay_fixture(payload))
+        bad = copy.deepcopy(payload["result"])
+        bad["nodes"][0]["io_seconds"] += 1.0      # clock, node 0
+        bad["nodes"][3]["bytes_to_ssd"] += 4096   # routing, node 3
+        msg = first_divergence(bad, actual)
+        assert msg.startswith("node[3].bytes_to_ssd: ")
+
+    def test_identical_results_have_no_divergence(self, payloads):
+        payload = next(iter(payloads.values()))
+        assert first_divergence(payload["result"],
+                                copy.deepcopy(payload["result"])) is None
+
+    def test_float_fields_compared_bit_exact(self, payloads):
+        payload = next(iter(payloads.values()))
+        bad = copy.deepcopy(payload["result"])
+        bad["nodes"][0]["io_seconds"] += 1e-15
+        if bad["nodes"][0]["io_seconds"] == payload["result"]["nodes"][0][
+                "io_seconds"]:
+            pytest.skip("perturbation below float resolution")
+        msg = first_divergence(payload["result"], bad)
+        assert "io_seconds" in msg
+
+
+def test_trace_fingerprint_guards_protocol_drift(payloads):
+    payload = copy.deepcopy(next(iter(payloads.values())))
+    payload["trace"]["sha256"] = "0" * 64
+    with pytest.raises(GoldenTraceMismatch, match="trace"):
+        replay_fixture(payload)
+
+
+def test_fixture_floats_roundtrip_exactly(payloads):
+    """JSON must preserve every float bit (repr shortest-roundtrip)."""
+
+    import json
+
+    for payload in payloads.values():
+        again = json.loads(json.dumps(payload))
+        assert again == payload

@@ -1,0 +1,117 @@
+"""Property test: engine and index-backend equivalence under *sharded*
+fleet replay with adaptive thresholds — the configuration where the
+8-16 node anomaly lives and where the single-node equivalence tests
+don't reach (per-shard threshold state, ragged shard tails, per-shard
+flush backlogs, gap replication).
+
+Every drawn fleet must produce bit-identical per-node SimResults under:
+
+    engine="batched"      vs  engine="per-request"
+    index_backend="numpy" vs  index_backend="avl"
+"""
+
+import dataclasses
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in CI without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+    HAVE_HYPOTHESIS = False
+
+from repro.core import FleetSimulator, Gap, ior, mixed, relabel
+from repro.core.workloads import KiB
+
+STREAM_LEN = 16
+REQUEST = 64 * KiB
+PATTERNS = ("segmented-contiguous", "segmented-random", "strided")
+
+
+def build_fleet_trace(app_specs, burst, with_gap):
+    apps = []
+    for i, (pattern, nreq, seed) in enumerate(app_specs):
+        apps.append(relabel(
+            ior(pattern, 4, total_bytes=nreq * REQUEST,
+                request_size=REQUEST, seed=seed),
+            app_id=i, file_id=i))
+    items = list(mixed(*apps, burst_requests=burst).trace)
+    if with_gap:
+        items.insert(len(items) // 2, Gap(0.5))
+    return items
+
+
+def assert_nodes_identical(a, b, label):
+    assert a.num_nodes == b.num_nodes
+    for i, (ra, rb) in enumerate(zip(a.node_results, b.node_results)):
+        for f in dataclasses.fields(ra):
+            va, vb = getattr(ra, f.name), getattr(rb, f.name)
+            assert va == vb, (
+                f"{label}: node[{i}].{f.name} diverged: {va!r} != {vb!r}"
+            )
+
+
+app_spec = st.tuples(
+    st.sampled_from(PATTERNS),
+    st.integers(min_value=24, max_value=80),   # requests per app
+    st.integers(min_value=0, max_value=10_000),
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    specs=st.lists(app_spec, min_size=1, max_size=3),
+    burst=st.sampled_from([None, 8, 32]),
+    with_gap=st.booleans(),
+    num_nodes=st.sampled_from([2, 3, 5]),
+    policy=st.sampled_from(["round-robin-app", "hash-file", "range-offset"]),
+    scheme=st.sampled_from(["ssdup+", "ssdup", "orangefs-bb"]),
+    cap_divisor=st.sampled_from([2, 4, 8]),
+)
+def test_engines_and_index_backends_agree_under_sharding(
+        specs, burst, with_gap, num_nodes, policy, scheme, cap_divisor):
+    items = build_fleet_trace(specs, burst, with_gap)
+    total = sum(i.size for i in items if not isinstance(i, Gap))
+    # small per-node capacity forces region swaps / blocked writers /
+    # forced flushes on most draws; region = capacity/2 must hold a request
+    capacity = max(total // cap_divisor, 4 * REQUEST)
+
+    def run(**node_kwargs):
+        return FleetSimulator(
+            num_nodes=num_nodes, scheme=scheme, policy=policy,
+            stream_len=STREAM_LEN, ssd_capacity=capacity, **node_kwargs,
+        ).run(items)
+
+    reference = run(engine="batched", index_backend="numpy")
+    oracle = run(engine="per-request", index_backend="numpy")
+    assert_nodes_identical(reference, oracle, "batched vs per-request")
+
+    avl = run(engine="batched", index_backend="avl")
+    assert_nodes_identical(reference, avl, "numpy vs avl index")
+
+    both = run(engine="per-request", index_backend="avl")
+    assert_nodes_identical(reference, both, "batched/numpy vs per-request/avl")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    specs=st.lists(app_spec, min_size=1, max_size=2),
+    num_nodes=st.sampled_from([2, 4]),
+)
+def test_fleet_scope_warmup_keeps_engines_identical(specs, num_nodes):
+    """threshold_scope='fleet' (warm global PercentList) must not break
+    engine equivalence — warmup only changes the starting threshold."""
+
+    items = build_fleet_trace(specs, burst=16, with_gap=False)
+    total = sum(i.size for i in items if not isinstance(i, Gap))
+
+    def run(engine):
+        return FleetSimulator(
+            num_nodes=num_nodes, scheme="ssdup+", policy="range-offset",
+            stream_len=STREAM_LEN, ssd_capacity=max(total // 4, 4 * REQUEST),
+            threshold_scope="fleet", engine=engine,
+        ).run(items)
+
+    assert_nodes_identical(run("batched"), run("per-request"),
+                           "fleet-scope warmup")

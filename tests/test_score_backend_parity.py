@@ -1,0 +1,104 @@
+"""Scoring-backend parity: ``jnp`` and ``pallas`` vs the numpy oracle.
+
+``compute_stream_scores`` has three backends; the numpy path is the
+int64 bit-exact oracle, the device paths run int32 lanes with float32
+distance accumulation.  These tests pin both device backends to the
+oracle on non-trivial traces (mixed patterns, ragged tail, multi-MiB
+offsets) so the currently 1.0x-speedup kernel cannot silently diverge
+before the device-resident replay work lands.
+
+Requires jax: without it the device backends silently fall back to the
+host path and parity would be vacuous.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import TraceBatch, compute_stream_scores, ior, mixed, relabel
+from repro.core.workloads import MiB
+
+STREAM_LEN = 128
+
+
+def _nontrivial_batch(tail: int = 0) -> TraceBatch:
+    """Mixed-pattern trace: sequential, random and strided phases
+    interleaved, offsets spanning several files.  ``tail`` trims requests
+    to leave a ragged final stream."""
+
+    apps = [
+        relabel(ior("segmented-contiguous", 8, total_bytes=48 * MiB, seed=11),
+                app_id=0, file_id=0),
+        relabel(ior("segmented-random", 8, total_bytes=48 * MiB, seed=12),
+                app_id=1, file_id=1),
+        relabel(ior("strided", 16, total_bytes=48 * MiB, seed=13),
+                app_id=2, file_id=2),
+    ]
+    items = list(mixed(*apps, burst_requests=64).trace)
+    if tail:
+        items = items[:-tail]
+    batch = TraceBatch.from_items(items)
+    # parity is only meaningful on the device path: offsets must fit the
+    # kernel's int32 lanes or the backend falls back to the host
+    assert int(batch.offsets.max()) < np.iinfo(np.int32).max
+    return batch
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return _nontrivial_batch()
+
+
+@pytest.fixture(scope="module")
+def ragged_batch():
+    return _nontrivial_batch(tail=37)
+
+
+def _assert_parity(batch, backend):
+    oracle = compute_stream_scores(batch, STREAM_LEN, backend="numpy")
+    scores = compute_stream_scores(batch, STREAM_LEN, backend=backend)
+    assert scores.backend == backend
+    assert len(scores) == len(oracle)
+    # the random factor is integer counting — bit-exact, no tolerance
+    np.testing.assert_array_equal(
+        np.asarray(scores.rf_sum, dtype=np.int64),
+        np.asarray(oracle.rf_sum, dtype=np.int64),
+        err_msg=f"{backend}: rf_sum diverged from numpy oracle")
+    # percentage = rf / (len-1): float32 division vs float64
+    np.testing.assert_allclose(
+        scores.percentage, oracle.percentage, rtol=1e-6, atol=1e-7,
+        err_msg=f"{backend}: percentage diverged")
+    # seek distance accumulates |sorted diffs| in float32 on device
+    np.testing.assert_allclose(
+        scores.seek_distance, oracle.seek_distance, rtol=1e-5,
+        err_msg=f"{backend}: seek_distance diverged")
+    # byte sums are exact in every backend
+    np.testing.assert_array_equal(scores.nbytes, oracle.nbytes)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_backend_matches_oracle(batch, backend):
+    _assert_parity(batch, backend)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_backend_matches_oracle_ragged_tail(ragged_batch, backend):
+    _assert_parity(ragged_batch, backend)
+
+
+def test_routing_decisions_identical_across_backends(batch):
+    """End-to-end: percentages from the device backends must induce the
+    same redirector decisions as the oracle (fp noise must stay far from
+    any threshold boundary on this trace)."""
+
+    from repro.core import IONodeSimulator
+
+    results = {}
+    for backend in ("numpy", "jnp"):
+        scores = compute_stream_scores(batch, STREAM_LEN, backend=backend)
+        sim = IONodeSimulator(scheme="ssdup+",
+                              ssd_capacity=batch.total_bytes // 2)
+        r = sim.run(batch, scores=scores)
+        results[backend] = (r.bytes_to_ssd, r.bytes_to_hdd_direct, r.flushes)
+    assert results["jnp"] == results["numpy"]

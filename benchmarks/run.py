@@ -32,6 +32,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from benchmarks import (  # noqa: E402
     bench_adaptive,
     bench_checkpoint,
+    bench_device_replay,
     bench_fleet,
     bench_hpio,
     bench_kernels,
@@ -59,6 +60,7 @@ SUITES = {
     "shardmap_decode": lambda tb: bench_shardmap_decode.run(),
     "fleet": lambda tb: bench_fleet.run(tb),
     "replay": lambda tb: bench_replay.run(tb),
+    "device_replay": lambda tb: bench_device_replay.run(tb),
 }
 
 CSV_PATH = os.path.join("experiments", "bench_results.csv")

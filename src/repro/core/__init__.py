@@ -17,6 +17,8 @@ Layering:
                   the checkpoint path)
 * trace batch   — :mod:`repro.core.trace` (struct-of-arrays traces +
                   vectorized per-stream scoring)
+* device engine — :mod:`repro.core.engine_device` (the batched engine's
+                  state transition as a jitted scan/vmap array program)
 * fleet         — :mod:`repro.core.fleet` (multi-node sharded replay,
                   paper's aggregate evaluation scaled to N nodes)
 """
@@ -41,7 +43,7 @@ from .random_factor import (
 from .redirector import DataRedirector, Device, RoutedStream
 from .simulator import Gap, IONodeSimulator, SimResult, run_schemes
 from .trace import StreamScores, TraceBatch, compute_stream_scores
-from .fleet import FleetResult, FleetSimulator, run_fleet_schemes
+from .fleet import FleetProgram, FleetResult, FleetSimulator, run_fleet_schemes
 from .workloads import Workload, hpio, ior, mixed, mpi_tile_io, relabel
 
 __all__ = [
@@ -79,6 +81,7 @@ __all__ = [
     "StreamScores",
     "TraceBatch",
     "compute_stream_scores",
+    "FleetProgram",
     "FleetResult",
     "FleetSimulator",
     "run_fleet_schemes",

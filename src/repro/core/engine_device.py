@@ -1,0 +1,1165 @@
+"""Device-resident replay engine: the batched engine's per-node state
+transition as a pure, fixed-shape array program.
+
+:class:`repro.core.simulator.IONodeSimulator` advances one node's replay
+through a Python loop over streams; this module re-expresses that
+transition as a functional step over a *state struct* (a pytree of
+per-lane scalars) driven by ``jax.lax.scan`` over trace *events* and
+``jax.vmap`` over *lanes* (node × scheme combinations), so an entire
+fleet sweep runs as ONE jitted device call
+(:class:`repro.core.fleet.FleetProgram`).
+
+Structure (the state-struct / transition / orchestration split):
+
+* **events** — :func:`build_events` lowers one shard's
+  (:class:`~repro.core.trace.TraceBatch`,
+  :class:`~repro.core.trace.StreamScores`) pair into a fixed-shape
+  struct-of-arrays event tape: one entry per stream or compute gap, in
+  the exact interleaving the batched engine uses (a full stream fires
+  before a gap marker at its end boundary; the trailing partial stream
+  fires after all remaining gaps).  Tapes are padded with ``valid=False``
+  entries to a shared power-of-two length so every lane scans the same
+  shape (:func:`stack_events`).
+* **state** — :func:`initial_lane_state` builds the per-lane state struct
+  (clocks, byte counters, region occupancy, the single in-flight flush
+  job, the adaptive-threshold window as a circular buffer, routing
+  hysteresis bits).  ``threshold_warmup`` is applied on the host through
+  the exact scalar policies, then transplanted into the window buffer.
+* **transition** — :func:`_event_step` is the pure per-lane step: stream
+  routing against the precomputed scores (Eq. 1–3 threshold update +
+  Algorithm 1 hysteresis), SSD region fills/swaps/blocks via a bounded
+  ``lax.while_loop``, HDD/overflow foreground advances with Eq. 7
+  interference, flush-quanta accounting per Eq. 6, and compute-gap
+  draining.  All four schemes run the same step, selected by per-lane
+  flags, so lanes of different schemes batch into one ``vmap``.
+* **orchestration** — :func:`replay_lanes` jits ``scan(vmap(step))`` plus
+  the vectorized end-of-trace drain and returns per-lane result arrays;
+  :func:`simulate_device` wraps a single lane into a
+  :class:`~repro.core.simulator.SimResult` (the ``engine="device"`` path
+  of :class:`IONodeSimulator`).
+
+Dtype policy: the engine runs under a scoped ``jax.experimental
+.enable_x64`` — clocks/rates in float64, byte counters in int64 — so the
+numbers track the numpy oracle at f64 resolution instead of drifting
+through float32.
+
+Accuracy contract (vs the bit-exact numpy engines): the device engine is
+*stream-granular* where the oracle is request-granular.  The documented
+approximations, all bounded and recorded as tolerances in the golden
+fixtures (``device_tolerance`` metadata, checked by
+``tests/test_engine_device.py``):
+
+1. **Region fills stop on mean-request boundaries.**  The oracle
+   appends whole requests (a region takes every request that fits
+   entirely; plain BB stops at the eager-trigger request); the device
+   reproduces that with the stream's MEAN request size — exact for
+   uniform-size streams (the golden traces), byte-fraction approximate
+   otherwise.
+2. **Flush quanta accumulate in float64.**  The oracle truncates
+   ``int(rate * wall)`` per request; the device accumulates
+   continuously (≤ 1 byte/request difference).
+3. **Eq. 6 residual seeks come from precomputed anchors, not a live
+   sort.**  A region buffering an arrival-window of a stream sorts that
+   window ALONE (``LogRegion.seek_count_sorted``), which no pro-rated
+   share of the whole stream's count reproduces.  The host precomputes
+   per stream (a) exact PREFIX seek counts at ``SUFFIX_ANCHORS + 1``
+   request quantiles — every plain-BB fill and every first two-region
+   fill is prefix-aligned, so those lerp within ~2% — and (b) dyadic
+   window anchors (whole/halves/quarters/eighths, extent count +
+   distinct-file baseline each) for interior fills, picked by nearest
+   scale with linear partial-coverage; overwritten-extent dedup is not
+   modeled (flush bytes = appended bytes).  A region holding SEVERAL
+   streams sorts their union, so extents contiguous across neighbouring
+   streams merge: the tape's per-stream cross-merge counts
+   (``xm_1..xm_{XMERGE_D}``, see :func:`_cross_stream_merges`) are
+   subtracted for partners still in the active region — without this a
+   tiled workload's flush rate is underestimated ~2× and plain-BB
+   routing diverges.  Merges at stream distance > ``XMERGE_D`` stay
+   uncorrected (seeks are over-, never under-counted).
+4. **Plain-BB overflow suffixes are interpolated, not re-scored.**  The
+   oracle re-scores an overflowed stream suffix from scratch (a strided
+   suffix sorts far worse than its byte share of the whole stream), so
+   the device precomputes every stream's suffix HDD time at
+   ``SUFFIX_ANCHORS + 1`` request-quantile split points on the host and
+   lerps between them by byte fraction — exact for whole streams (the
+   0-split anchor IS the stream's scored time) and at anchor-aligned
+   splits, a few percent between anchors.
+5. Routing, threshold evolution, and therefore **byte routing for the
+   orangefs/ssdup/ssdup+ schemes is timing-independent and exact**;
+   plain-BB byte splits are timing-coupled (overflow depends on when a
+   flush completes) and carry tolerances.
+
+``metadata_bytes`` is reported as 0, matching the oracle's post-drain
+value.  The unbounded adaptive window (``adaptive_window=None``) is not
+representable in fixed shape — the device engine requires a finite
+window.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Mapping, Sequence
+
+import numpy as np
+
+try:  # the control plane must import even where jax is absent
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import enable_x64
+except Exception:  # pragma: no cover - jax is installed in this repo
+    jax = None
+    jnp = None
+
+from .adaptive import (
+    DEFAULT_THRESHOLD,
+    AdaptiveThreshold,
+    StaticWatermarkThreshold,
+)
+from .device_model import HDDModel, IngestLink, InterferenceModel, SSDModel
+from .random_factor import DEFAULT_STREAM_LEN
+
+SCHEME_IDS = {"orangefs": 0, "orangefs-bb": 1, "ssdup": 2, "ssdup+": 3}
+
+#: Documented comparison tolerances of the device engine vs the numpy
+#: oracle, per SimResult field: ``field -> (rtol, atol)``.  Derived from
+#: the approximation list in the module docstring; golden fixtures embed
+#: this table (``device_tolerance``) at --write time after verifying the
+#: device replay satisfies it, and ``tests/test_engine_device.py``
+#: asserts against the embedded copy.
+DEVICE_TOLERANCES: dict[str, tuple[float, float]] = {
+    "total_bytes": (0.0, 0.0),        # conservation: every byte lands
+    "per_app_bytes": (0.0, 0.0),      # host-computed, scheme-independent
+    "bytes_to_ssd": (0.0, 4 << 20),   # BB overflow split is timing-coupled
+    "bytes_to_hdd_direct": (0.0, 4 << 20),
+    "metadata_bytes": (0.0, 0.0),     # both report 0 post-drain
+    "flushes": (0.0, 2.0),            # BB flush count is timing-coupled
+    "peak_ssd_occupancy": (0.0, 4 << 20),
+    "blocked_seconds": (0.05, 1e-6),  # Eq. 6 anchor lerp at block time
+    "flush_paused_seconds": (0.05, 1e-6),
+    "io_seconds": (0.05, 1e-9),       # suffix/seek anchor lerp dominates
+    "total_seconds": (0.02, 1e-9),
+}
+
+#: Suffix-anchor count: stream suffix HDD times are precomputed at
+#: ``round(j * n / SUFFIX_ANCHORS)`` for ``j = 0..SUFFIX_ANCHORS``
+#: (anchor 0 = the whole stream, the last anchor = empty suffix).
+SUFFIX_ANCHORS = 16
+
+#: Dyadic window scales for Eq. 6 region-seek anchors: every stream is
+#: scored whole, in halves, quarters and eighths (1 + 2 + 4 + 8 = 15
+#: windows).  A region holding an arrival-window of a stream sorts that
+#: window ALONE, so its seek count is NOT a pro-rated share of the whole
+#: stream's (a strided stream's window loses the cross-window extent
+#: merges); the device picks the scale nearest the fill width and
+#: interpolates partial window coverage linearly.
+WINDOW_SCALES = 4
+N_WINDOWS = (1 << WINDOW_SCALES) - 1
+
+#: Cross-stream merge depth: a flushed region sorts ALL its buffered
+#: streams together, so extents that are contiguous ACROSS neighbouring
+#: streams merge and cost no seek (``LogRegion.seek_count_sorted``) —
+#: on tiled workloads (IOR strided) this collapses per-stream seek sums
+#: by an order of magnitude.  The tape carries, per stream, the count of
+#: sort-adjacent contiguous pairs it forms with each of its
+#: ``XMERGE_D`` predecessors; the fill loop subtracts the pairs whose
+#: partner stream is (fractionally) in the active region.  Pairs at
+#: distance > XMERGE_D are left uncorrected (the estimate stays
+#: conservative: seeks are over-, never under-counted).
+XMERGE_D = 4
+
+_EVENT_FIELDS = {
+    "valid": np.bool_,
+    "is_gap": np.bool_,
+    "gap_sec": np.float64,
+    "pct": np.float64,
+    "nbytes": np.int64,
+    "net_t": np.float64,
+    "ssd_w": np.float64,
+    "mean_sz": np.float64,
+    **{f"hddt_{j}": np.float64 for j in range(SUFFIX_ANCHORS + 1)},
+    **{f"pf_{j}": np.float64 for j in range(SUFFIX_ANCHORS + 1)},
+    **{f"wf_{i}": np.float64 for i in range(N_WINDOWS)},
+    **{f"wn_{i}": np.float64 for i in range(N_WINDOWS)},
+    **{f"xm_{d}": np.float64 for d in range(1, XMERGE_D + 1)},
+}
+
+
+def _require_jax():
+    if jax is None:  # pragma: no cover - jax is installed in this repo
+        raise RuntimeError(
+            "engine='device' requires jax; use engine='batched' instead"
+        )
+
+
+# ---------------------------------------------------------------------------
+# host side: event tapes, lane constants, initial state
+# ---------------------------------------------------------------------------
+
+
+def _stream_extent_starts(
+    batch, bounds: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-stream Eq. 6 seek statistics: ``(extent_starts, nfiles)``.
+
+    ``extent_starts`` is the stream's extent count after the per-file
+    offset sort (per file: 1 + non-contiguous breaks), i.e. exactly
+    ``LogRegion.seek_count_sorted`` for a region holding the whole
+    stream with unique extents.  ``nfiles`` (distinct files touched) is
+    the part that does NOT scale when a region holds a stream fraction:
+    each region pays the per-file baseline in full, only the breaks
+    pro-rate.  One vectorized lexsort covers all streams.
+    """
+
+    ns = len(bounds) - 1
+    sid = np.repeat(np.arange(ns, dtype=np.int64), np.diff(bounds))
+    order = np.lexsort((batch.offsets, batch.file_ids, sid))
+    so = batch.offsets[order]
+    ss = batch.sizes[order]
+    sf = batch.file_ids[order]
+    ssid = sid[order]
+    new_file = np.ones(len(so), dtype=bool)
+    new_file[1:] = (ssid[1:] != ssid[:-1]) | (sf[1:] != sf[:-1])
+    start = new_file.copy()
+    start[1:] |= so[1:] != so[:-1] + ss[:-1]
+    return (
+        np.bincount(ssid[start], minlength=ns).astype(np.float64),
+        np.bincount(ssid[new_file], minlength=ns).astype(np.float64),
+    )
+
+
+def _cross_stream_merges(batch, bounds: np.ndarray) -> np.ndarray:
+    """Per-stream cross-merge counts ``(ns, XMERGE_D)``.
+
+    ``out[j, d-1]`` = contiguous pairs stream ``j`` forms with stream
+    ``j - d`` in the GLOBAL per-file offset sort (each pair assigned to
+    the later stream).  For non-overlapping extents a contiguous pair is
+    always sort-adjacent — an element between ``p`` and
+    ``p.offset + p.size`` would overlap ``p`` — so one global lexsort
+    suffices.  These are exactly the seeks
+    ``LogRegion.seek_count_sorted`` does NOT pay when both streams sit
+    in the same region, i.e. the gap between summing per-stream seek
+    estimates and sorting the region's union.
+    """
+
+    ns = len(bounds) - 1
+    out = np.zeros((ns, XMERGE_D), dtype=np.float64)
+    if batch.num_requests < 2:
+        return out
+    sid = np.repeat(np.arange(ns, dtype=np.int64), np.diff(bounds))
+    order = np.lexsort((batch.offsets, batch.file_ids))
+    so = batch.offsets[order]
+    ss = batch.sizes[order]
+    sf = batch.file_ids[order]
+    ssid = sid[order]
+    contig = (sf[1:] == sf[:-1]) & (so[1:] == so[:-1] + ss[:-1])
+    d = np.abs(ssid[1:] - ssid[:-1])
+    later = np.maximum(ssid[1:], ssid[:-1])
+    for k in range(1, XMERGE_D + 1):
+        sel = contig & (d == k)
+        out[:, k - 1] = np.bincount(later[sel], minlength=ns)
+    return out
+
+
+def _masked_predecessors(mask: np.ndarray) -> np.ndarray:
+    """Index of each element's nearest PRECEDING masked element (-1: none).
+
+    The anchor families below all reduce to "score a subset of a sorted
+    sequence": the subset keeps the global sort order, so the element
+    before ``v`` in the subset-restricted order is simply the nearest
+    earlier index with ``mask`` set — one ``maximum.accumulate``, no
+    re-sort.  This is what lets every anchor level reuse ONE global
+    lexsort instead of paying its own (the tape build was ~38 lexsorts
+    per shard before; it is 2 now).
+    """
+
+    idx = np.arange(mask.shape[0], dtype=np.int64)
+    pidx = np.maximum.accumulate(np.where(mask, idx, -1))
+    prev = np.empty_like(pidx)
+    prev[0] = -1
+    prev[1:] = pidx[:-1]
+    return prev
+
+
+def _window_seek_anchors(
+    batch, bounds: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Eq. 6 seek anchors for dyadic arrival-windows of every stream.
+
+    Returns ``(wf, wn)`` of shape ``(ns, N_WINDOWS)``: window ``(s, j)``
+    (scale ``s`` splits the stream into ``2**s`` equal-request windows)
+    is scored ALONE — extent count ``wf`` (per file: 1 + non-contiguous
+    breaks) and distinct-file baseline ``wn``.  Column layout is
+    scale-major: ``[whole, half0, half1, quarter0..3, eighth0..7]``.
+
+    One global ``(stream, file, offset)`` lexsort serves all 15 windows:
+    a window's elements keep their global sort order, so each window is
+    scored with a masked predecessor pass (:func:`_masked_predecessors`)
+    instead of its own sort.
+    """
+
+    ns = len(bounds) - 1
+    lens = np.diff(bounds)
+    wf = np.zeros((ns, N_WINDOWS), dtype=np.float64)
+    wn = np.zeros((ns, N_WINDOWS), dtype=np.float64)
+    if batch.num_requests == 0:
+        return wf, wn
+    sid = np.repeat(np.arange(ns, dtype=np.int64), lens)
+    pos_in = np.arange(batch.num_requests, dtype=np.int64) - np.repeat(
+        bounds[:-1], lens
+    )
+    order = np.lexsort((batch.offsets, batch.file_ids, sid))
+    so = batch.offsets[order]
+    ss = batch.sizes[order]
+    sf = batch.file_ids[order]
+    sdi = sid[order]
+    spos = pos_in[order]
+    slen = lens[sdi]
+    col = 0
+    for s in range(WINDOW_SCALES):
+        w = 1 << s
+        # window of position p: boundaries sit at round(k * len / w), so
+        # p's window is the count of k >= 1 with floor(k*len/w + 0.5) <= p,
+        # i.e. 2*len*k < (2p+1)*w — integer-exact, no float quantiles
+        win = np.minimum(
+            ((2 * spos + 1) * w - 1) // np.maximum(2 * slen, 1), w - 1
+        )
+        for k in range(w):
+            m = win == k
+            prev = _masked_predecessors(m)
+            pc = np.maximum(prev, 0)
+            same = m & (prev >= 0) & (sdi[pc] == sdi) & (sf[pc] == sf)
+            contig = same & (so == so[pc] + ss[pc])
+            wf[:, col + k] = np.bincount(sdi[m & ~contig], minlength=ns)
+            wn[:, col + k] = np.bincount(sdi[m & ~same], minlength=ns)
+        col += w
+    return wf, wn
+
+
+def _prefix_seek_anchors(batch, bounds: np.ndarray) -> np.ndarray:
+    """``(ns, SUFFIX_ANCHORS + 1)`` Eq. 6 seek counts of every stream's
+    arrival-order PREFIX at the request-quantile split points.
+
+    Anchor ``j`` scores requests ``[0, round(j * n / A))`` of the stream
+    sorted alone (per file: 1 + non-contiguous breaks), i.e. exactly the
+    oracle's ``seek_count_sorted`` for a region buffering that prefix.
+    Anchor 0 (empty prefix) is 0, anchor A is the whole stream.  Every
+    plain-BB fill and every FIRST two-region fill of a stream is
+    prefix-aligned, so these anchors are exact there up to the quantile
+    lerp.  One global lexsort + one masked predecessor pass per anchor.
+    """
+
+    ns = len(bounds) - 1
+    out = np.zeros((ns, SUFFIX_ANCHORS + 1), dtype=np.float64)
+    if batch.num_requests == 0:
+        return out
+    lens = np.diff(bounds)
+    sid = np.repeat(np.arange(ns, dtype=np.int64), lens)
+    pos_in = np.arange(batch.num_requests, dtype=np.int64) - np.repeat(
+        bounds[:-1], lens
+    )
+    order = np.lexsort((batch.offsets, batch.file_ids, sid))
+    so = batch.offsets[order]
+    ss = batch.sizes[order]
+    sf = batch.file_ids[order]
+    sdi = sid[order]
+    spos = pos_in[order]
+    for j in range(1, SUFFIX_ANCHORS + 1):
+        k = np.floor(j * lens / SUFFIX_ANCHORS + 0.5).astype(np.int64)
+        m = spos < k[sdi]
+        prev = _masked_predecessors(m)
+        pc = np.maximum(prev, 0)
+        same = m & (prev >= 0) & (sdi[pc] == sdi) & (sf[pc] == sf)
+        contig = same & (so == so[pc] + ss[pc])
+        out[:, j] = np.bincount(sdi[m & ~contig], minlength=ns)
+    return out
+
+
+def _suffix_hdd_anchors(batch, bounds: np.ndarray, hdd) -> np.ndarray:
+    """``(ns, SUFFIX_ANCHORS + 1)`` HDD device times of every stream's
+    arrival-order suffix at the request-quantile split points.
+
+    Anchor ``j`` of stream ``s`` scores the suffix starting at request
+    ``round(j * n_s / SUFFIX_ANCHORS)`` exactly like the oracle's
+    overflow path (sort the suffix alone, Eq. 1 seeks + sweep distance +
+    sequential time); the last anchor (empty suffix) is 0.  One global
+    ``(stream, offset)`` lexsort + a masked predecessor pass per anchor.
+    """
+
+    ns = len(bounds) - 1
+    out = np.zeros((ns, SUFFIX_ANCHORS + 1), dtype=np.float64)
+    if batch.num_requests == 0:
+        return out
+    lens = np.diff(bounds)
+    sid = np.repeat(np.arange(ns, dtype=np.int64), lens)
+    pos_in = np.arange(batch.num_requests, dtype=np.int64) - np.repeat(
+        bounds[:-1], lens
+    )
+    order = np.lexsort((batch.offsets, sid))
+    so = batch.offsets[order]
+    ss = batch.sizes[order]
+    sdi = sid[order]
+    spos = pos_in[order]
+    szf = ss.astype(np.float64)
+    for j in range(SUFFIX_ANCHORS):
+        k = np.floor(j * lens / SUFFIX_ANCHORS + 0.5).astype(np.int64)
+        m = spos >= k[sdi]
+        prev = _masked_predecessors(m)
+        pc = np.maximum(prev, 0)
+        pair = m & (prev >= 0) & (sdi[pc] == sdi)
+        resid = np.where(pair, so - so[pc] - ss[pc], 0)
+        rf = np.bincount(sdi[pair & (resid != 0)], minlength=ns)
+        dist = np.bincount(
+            sdi, weights=np.abs(resid).astype(np.float64), minlength=ns
+        )
+        nb = np.bincount(sdi[m], weights=szf[m], minlength=ns)
+        # same term order as HDDModel.write_time
+        out[:, j] = (
+            rf * hdd.seek_time + dist * hdd.seek_dist_coeff + nb / hdd.seq_bw
+        )
+    return out
+
+
+def build_events(
+    batch,
+    scores,
+    stream_len: int = DEFAULT_STREAM_LEN,
+    hdd: HDDModel | None = None,
+    ssd: SSDModel | None = None,
+    link: IngestLink | None = None,
+) -> dict[str, np.ndarray]:
+    """Lower one shard into its event tape (struct-of-arrays, length E).
+
+    One event per stream or gap, in the batched engine's firing order.
+    All timing inputs the device step needs are precomputed here in
+    float64 with the oracle's exact expressions: whole-stream HDD time
+    (Eq. 1 seeks + sweep + sequential), network time, the sequential sum
+    of per-request SSD walls, and the per-stream score row.
+    """
+
+    hdd = hdd or HDDModel()
+    ssd = ssd or SSDModel()
+    link = link or IngestLink()
+
+    bounds = batch.stream_bounds(stream_len)
+    ns = len(bounds) - 1 if batch.num_requests else 0
+    n_req = np.diff(bounds) if ns else np.zeros(0, dtype=np.int64)
+
+    nb = np.asarray(scores.nbytes, dtype=np.int64)
+    rf = np.asarray(scores.rf_sum, dtype=np.float64)
+    dist = np.asarray(scores.seek_distance, dtype=np.float64)
+    pct = np.asarray(scores.percentage, dtype=np.float64)
+    if len(nb) != ns:
+        raise ValueError(
+            f"scores cover {len(nb)} streams but the trace produced {ns}"
+        )
+    # same association order as HDDModel.write_time / IngestLink.time
+    hdd_t = rf * hdd.seek_time + dist * hdd.seek_dist_coeff + nb / hdd.seq_bw
+    net_t = nb / link.bw
+    if ns:
+        anchors = _suffix_hdd_anchors(batch, bounds, hdd)
+        # anchor 0 (whole stream) comes straight from the scores so the
+        # pure-HDD path reproduces the oracle's walls bit-for-bit
+        anchors[:, 0] = hdd_t
+    else:
+        anchors = np.zeros((0, SUFFIX_ANCHORS + 1), dtype=np.float64)
+    if ns:
+        w = np.maximum(batch.sizes / link.bw, batch.sizes / ssd.write_bw)
+        ssd_w = np.add.reduceat(w, bounds[:-1])
+        wf, wn = _window_seek_anchors(batch, bounds)
+        pf = _prefix_seek_anchors(batch, bounds)
+        xm = _cross_stream_merges(batch, bounds)
+    else:
+        ssd_w = np.zeros(0, dtype=np.float64)
+        wf = np.zeros((0, N_WINDOWS), dtype=np.float64)
+        wn = np.zeros((0, N_WINDOWS), dtype=np.float64)
+        pf = np.zeros((0, SUFFIX_ANCHORS + 1), dtype=np.float64)
+        xm = np.zeros((0, XMERGE_D), dtype=np.float64)
+    mean_sz = nb / np.maximum(n_req, 1)
+
+    gap_pos = batch.gap_positions
+    gap_sec = batch.gap_seconds
+    ng = len(gap_pos)
+
+    # the batched engine's interleave: a full stream fires before any gap
+    # at its end boundary; the trailing partial stream fires after ALL
+    # remaining gaps (see IONodeSimulator._run_batched)
+    if ns:
+        fire_before = np.where(
+            n_req == stream_len, bounds[1:], batch.num_requests + 1
+        )
+        gaps_before = np.searchsorted(gap_pos, fire_before, side="left")
+    else:
+        gaps_before = np.zeros(0, dtype=np.int64)
+
+    e = ns + ng
+    ev = {k: np.zeros(e, dtype=dt) for k, dt in _EVENT_FIELDS.items()}
+    ev["valid"][:] = True
+    s_idx = np.arange(ns) + gaps_before
+    g_idx = np.arange(ng) + np.searchsorted(
+        gaps_before, np.arange(ng), side="right"
+    )
+    ev["pct"][s_idx] = pct
+    ev["nbytes"][s_idx] = nb
+    for j in range(SUFFIX_ANCHORS + 1):
+        ev[f"hddt_{j}"][s_idx] = anchors[:, j]
+        ev[f"pf_{j}"][s_idx] = pf[:, j]
+    for i in range(N_WINDOWS):
+        ev[f"wf_{i}"][s_idx] = wf[:, i]
+        ev[f"wn_{i}"][s_idx] = wn[:, i]
+    for d in range(1, XMERGE_D + 1):
+        ev[f"xm_{d}"][s_idx] = xm[:, d - 1]
+    ev["net_t"][s_idx] = net_t
+    ev["ssd_w"][s_idx] = ssd_w
+    ev["mean_sz"][s_idx] = mean_sz
+    ev["is_gap"][g_idx] = True
+    ev["gap_sec"][g_idx] = gap_sec
+    return ev
+
+
+def _pad_len(n: int) -> int:
+    """Shared tape length: next power of two (bounds jit recompiles)."""
+
+    p = 8
+    while p < n:
+        p *= 2
+    return p
+
+
+def stack_events(
+    tapes: Sequence[Mapping[str, np.ndarray]], pad_to: int | None = None
+) -> dict[str, np.ndarray]:
+    """Stack per-lane event tapes into ``(S, L)`` arrays.
+
+    Tapes are right-padded with ``valid=False`` events to ``pad_to``
+    (default: the next power of two above the longest tape, so programs
+    of similar size share one compiled executable).
+    """
+
+    if not tapes:
+        raise ValueError("need at least one lane")
+    longest = max(len(t["valid"]) for t in tapes)
+    s = pad_to if pad_to is not None else _pad_len(longest)
+    if s < longest:
+        raise ValueError(f"pad_to={s} < longest tape {longest}")
+    out = {
+        k: np.zeros((s, len(tapes)), dtype=dt)
+        for k, dt in _EVENT_FIELDS.items()
+    }
+    for j, t in enumerate(tapes):
+        n = len(t["valid"])
+        for k in _EVENT_FIELDS:
+            out[k][:n, j] = t[k]
+    return out
+
+
+def lane_consts(
+    scheme: str, ssd_capacity: int, flush_gate: float = 0.5
+) -> dict[str, object]:
+    """Per-lane scalar constants (scheme id, region capacity, gate)."""
+
+    if scheme not in SCHEME_IDS:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    if scheme == "orangefs":
+        cap = 0
+    elif scheme == "orangefs-bb":
+        cap = int(ssd_capacity)
+    else:  # two-region pipeline: half the SSD per region
+        cap = int(ssd_capacity) // 2
+    return {
+        "scheme": np.int32(SCHEME_IDS[scheme]),
+        "cap": np.int64(cap),
+        "gate": np.float64(flush_gate),
+    }
+
+
+def initial_lane_state(
+    scheme: str,
+    window: int,
+    threshold_warmup: Sequence[float] | None = None,
+) -> dict[str, np.ndarray]:
+    """One lane's initial state struct (numpy; stacked by the caller).
+
+    ``threshold_warmup`` is replayed through the exact host policy
+    (:class:`AdaptiveThreshold` / :class:`StaticWatermarkThreshold`) and
+    the resulting window/hysteresis state transplanted — bit-identical
+    to seeding the oracle's policy.
+    """
+
+    if window is None or window < 1:
+        raise ValueError(
+            "engine='device' needs a finite adaptive window "
+            f"(got {window!r}); the unbounded PercentList is host-only"
+        )
+    win = np.full(window, np.inf, dtype=np.float64)
+    win_n = 0
+    win_p = 0
+    static_rand = False
+    if threshold_warmup is not None:
+        if scheme == "ssdup+":
+            pol = AdaptiveThreshold(window=window)
+            pol.seed(threshold_warmup)
+            recent = list(pol._recent)  # arrival order, oldest first
+            win[: len(recent)] = recent
+            win_n = len(recent)
+            win_p = len(recent) % window
+        elif scheme == "ssdup":
+            static_rand = StaticWatermarkThreshold().seed(
+                threshold_warmup
+            )._last_random
+    return {
+        "clock": np.float64(0.0),
+        "gap": np.float64(0.0),
+        "pause": np.float64(0.0),
+        "blocked": np.float64(0.0),
+        "b_ssd": np.int64(0),
+        "b_hdd": np.int64(0),
+        "a_used": np.int64(0),
+        "s_used": np.int64(0),
+        "peak": np.int64(0),
+        "a_fs": np.float64(0.0),
+        # fraction of each of the last XMERGE_D streams buffered in the
+        # ACTIVE region (newest first) — partners for the cross-stream
+        # merge correction of the flush seek estimate
+        **{f"xf_{d}": np.float64(0.0) for d in range(1, XMERGE_D + 1)},
+        "j_left": np.float64(0.0),
+        "j_rate": np.float64(1.0),  # >0 so where() divisions stay finite
+        "j_alive": np.bool_(False),
+        "flushes": np.int32(0),
+        "win": win,
+        "win_n": np.int32(win_n),
+        "win_p": np.int32(win_p),
+        "static_rand": np.bool_(static_rand),
+        "cur_ssd": np.bool_(False),  # paper: apps start writing the HDD
+    }
+
+
+def _stack_lanes(dicts: Sequence[Mapping[str, np.ndarray]]) -> dict:
+    return {k: np.stack([d[k] for d in dicts]) for k in dicts[0]}
+
+
+# ---------------------------------------------------------------------------
+# device side: the pure per-lane transition
+# ---------------------------------------------------------------------------
+
+
+def _i32(b):
+    return b.astype(jnp.int32)
+
+
+def _observe_and_route(g, lane, st, pct):
+    """Threshold observe + Algorithm 1 hysteresis for one stream.
+
+    Returns ``(dev_ssd, allowed, upd)`` — the device serving THIS stream,
+    whether the traffic-aware gate lets the flusher run during it, and
+    the policy-state updates (applied only on stream events of
+    threshold schemes).
+    """
+
+    scheme = lane["scheme"]
+    is_ofs = scheme == 0
+    is_bb = scheme == 1
+    is_plus = scheme == 3
+
+    # -- adaptive threshold (Eq. 2/3): avgper over the PRE-insert sorted
+    #    window, insert (circular buffer overwrites the oldest entry),
+    #    index floor((1-avgper)*n) into the POST-insert sorted window
+    win, win_n, win_p = st["win"], st["win_n"], st["win_p"]
+    w = win.shape[0]
+    pre_sorted = jnp.sort(win)  # +inf pads sort last
+    csum = jnp.cumsum(pre_sorted)
+    have = win_n > 0
+    avg = jnp.where(
+        have, csum[jnp.maximum(win_n - 1, 0)] / jnp.maximum(win_n, 1), 0.0
+    )
+    win2 = win.at[win_p].set(pct)
+    n2 = jnp.minimum(win_n + 1, w)
+    p2 = (win_p + 1) % w
+    post_sorted = jnp.sort(win2)
+    idx = jnp.clip(jnp.floor((1.0 - avg) * n2).astype(jnp.int32), 0, n2 - 1)
+    adap_thr = jnp.where(have, post_sorted[idx], g["default_thr"])
+
+    # -- static watermarks (SSDUP): hysteresis between high/low
+    sr = st["static_rand"]
+    sr2 = jnp.where(
+        pct > g["static_high"],
+        True,
+        jnp.where(pct < g["static_low"], False, sr),
+    )
+    static_thr = jnp.where(sr2, g["static_low"], g["static_high"])
+
+    thr = jnp.where(is_plus, adap_thr, static_thr)
+
+    # -- Algorithm 1: this stream rides the PREVIOUS decision; the new
+    #    percentage-vs-threshold comparison steers the NEXT stream
+    #    (equality keeps the current device)
+    cur = st["cur_ssd"]
+    dev_ssd = jnp.where(is_bb, True, jnp.where(is_ofs, False, cur))
+    cur2 = jnp.where(pct > thr, True, jnp.where(pct < thr, False, cur))
+
+    # traffic-aware gate (Section 2.4.2): only ssdup+ pauses; BB jobs are
+    # forced and ssdup flushes immediately
+    allowed = jnp.where(is_plus, pct >= lane["gate"], True)
+
+    upd = {
+        "win": win2,
+        "win_n": n2,
+        "win_p": p2,
+        "static_rand": sr2,
+        "cur_ssd": cur2,
+    }
+    return dev_ssd, allowed, upd
+
+
+def _ssd_fill_loop(g, lane, st, ev, allowed, dev_ssd):
+    """SSD-routed stream: fill regions, swap/block/trigger, overflow.
+
+    Returns the post-loop state pieces plus the overflowed byte count
+    (plain BB only; 0 elsewhere).
+    """
+
+    scheme = lane["scheme"]
+    is_bb = scheme == 1
+    is_tworeg = (scheme == 2) | (scheme == 3)
+    cap = lane["cap"]
+    nb = ev["nbytes"]
+    nb_f = jnp.maximum(nb, 1).astype(jnp.float64)
+    margin = jnp.maximum(ev["mean_sz"], (cap // 256).astype(jnp.float64))
+
+    def cond(c):
+        return (c["rem"] > 0) & ~c["ovf"]
+
+    def body(c):
+        bb_ovf = is_bb & c["j_alive"]  # BB drains: whole rest overflows
+        room = cap - c["a_used"]
+        # plain BB stops at the eager-trigger request — the first append
+        # that leaves free space below the margin — NOT at a full region.
+        # The oracle appends whole requests, so the fill stops on a
+        # request boundary: k = floor((room - margin)/size) + 1 more
+        # requests land before the trigger fires (k*size <= room because
+        # margin >= size).
+        room_f = room.astype(jnp.float64)
+        m = jnp.maximum(ev["mean_sz"], 1.0)
+        k = jnp.floor((room_f - margin) / m) + 1.0
+        bb_cap = jnp.ceil(jnp.maximum(k, 0.0) * m).astype(jnp.int64)
+        # two-region fills also stop on a request boundary: the oracle
+        # appends every request that fits ENTIRELY, then swaps/blocks
+        tr_cap = (jnp.floor(room_f / m) * m).astype(jnp.int64)
+        fill_cap = jnp.where(is_bb, jnp.minimum(room, bb_cap), tr_cap)
+        fill = jnp.where(bb_ovf, 0, jnp.minimum(c["rem"], fill_cap))
+        frac = fill / nb_f
+        segw = ev["ssd_w"] * frac
+
+        # flush bookkeeping while the foreground writes the SSD: the job
+        # drains at its full Eq. 6 effective rate (no HDD contention)
+        progressing = c["j_alive"] & allowed
+        prog = c["j_rate"] * segw
+        completed = progressing & (prog >= c["j_left"])
+        j_left = jnp.where(
+            completed,
+            0.0,
+            jnp.where(progressing, c["j_left"] - prog, c["j_left"]),
+        )
+        pause = c["pause"] + jnp.where(c["j_alive"] & ~allowed, segw, 0.0)
+        flushes = c["flushes"] + _i32(completed)
+        s_used = jnp.where(completed, 0, c["s_used"])
+        j_alive = c["j_alive"] & ~completed
+
+        clock = c["clock"] + segw
+        a_used = c["a_used"] + fill
+        # Eq. 6 seek accrual: the region sorts its arrival-window of the
+        # stream ALONE, so score the fill against the dyadic window
+        # anchors of the nearest scale — per window, the distinct-file
+        # baseline lands whole with any coverage and only the extent
+        # breaks scale with the covered fraction
+        a0 = (nb_f - c["rem"].astype(jnp.float64)) / nb_f
+        wfrac = fill.astype(jnp.float64) / nb_f
+        a1 = a0 + wfrac
+        scale = jnp.clip(
+            jnp.round(-jnp.log2(jnp.maximum(wfrac, 1e-9))),
+            0,
+            WINDOW_SCALES - 1,
+        ).astype(jnp.int32)
+        seg_fs = jnp.zeros_like(nb_f)
+        col = 0
+        for s_ in range(WINDOW_SCALES):
+            nw = 1 << s_
+            acc = jnp.zeros_like(nb_f)
+            for wj in range(nw):
+                lo = wj / nw
+                cov = jnp.clip(
+                    (jnp.minimum(a1, lo + 1.0 / nw) - jnp.maximum(a0, lo))
+                    * nw,
+                    0.0,
+                    1.0,
+                )
+                wfv = ev[f"wf_{col}"]
+                wnv = ev[f"wn_{col}"]
+                acc = acc + jnp.where(
+                    cov > 0, wnv + (wfv - wnv) * cov, 0.0
+                )
+                col += 1
+            seg_fs = jnp.where(scale == s_, acc, seg_fs)
+        # prefix-aligned fills (every BB fill, the first two-region fill
+        # of a stream) have EXACT anchors at the request quantiles: lerp
+        # the prefix seek counts instead of the dyadic window estimate
+        ppos = jnp.clip(a1 * SUFFIX_ANCHORS, 0.0, float(SUFFIX_ANCHORS))
+        pj = jnp.clip(
+            jnp.floor(ppos), 0.0, float(SUFFIX_ANCHORS - 1)
+        ).astype(jnp.int32)
+        plam = ppos - pj.astype(jnp.float64)
+        pref_fs = jnp.zeros_like(nb_f)
+        for j in range(SUFFIX_ANCHORS):
+            sel = pj == j
+            lerp = (1.0 - plam) * ev[f"pf_{j}"] + plam * ev[f"pf_{j + 1}"]
+            pref_fs = jnp.where(sel, lerp, pref_fs)
+        seg_fs = jnp.where(a0 <= 0.0, pref_fs, seg_fs)
+        seg_fs = jnp.where(fill > 0, seg_fs, 0.0)
+        # cross-stream merge correction: pairs this stream forms with a
+        # predecessor still (fractionally) in the active region cost no
+        # seek once the region sorts its union; pro-rate by this fill's
+        # share of the stream
+        seg_xm = wfrac * sum(
+            ev[f"xm_{d}"] * c[f"xf_{d}"] for d in range(1, XMERGE_D + 1)
+        )
+        a_fs = jnp.maximum(c["a_fs"] + seg_fs - seg_xm, 0.0)
+        b_ssd = c["b_ssd"] + fill
+        rem = c["rem"] - fill
+
+        # -- plain BB eager trigger: the append that leaves free space
+        #    below max(request, cap/256) schedules a forced flush
+        bb_trig = is_bb & ~bb_ovf & ((room - fill) < margin)
+        # -- two-region swap: the next request does not fit
+        swap = is_tworeg & (rem > 0)
+        # a live flush on the standby region blocks the writer: drain it
+        # at the job's exclusive effective rate, then swap
+        do_block = swap & j_alive
+        dtb = jnp.where(do_block, j_left / c["j_rate"], 0.0)
+        clock = clock + dtb
+        blocked = c["blocked"] + dtb
+        flushes = flushes + _i32(do_block)
+        j_alive = j_alive & ~do_block
+        j_left = jnp.where(do_block, 0.0, j_left)
+        s_used = jnp.where(do_block, 0, s_used)
+
+        # schedule the filled region's flush (Eq. 6: seeks = pro-rated
+        # extent-start count of the region's content)
+        sched = swap | bb_trig
+        jb = a_used
+        jb_f = jb.astype(jnp.float64)
+        service = a_fs * g["seek_time"] + jb_f / g["seq_bw"]
+        n_rate = jnp.where(jb > 0, jb_f / service, g["seq_bw"])
+        j_rate = jnp.where(sched, n_rate, c["j_rate"])
+        j_left = jnp.where(sched, jb_f, j_left)
+        j_alive = j_alive | sched
+        s_used = jnp.where(sched, jb, s_used)
+        a_used = jnp.where(sched, 0, a_used)
+        a_fs = jnp.where(sched, 0.0, a_fs)
+        # scheduling hands the region's content to the flusher: earlier
+        # streams leave the active region, and only fills AFTER the swap
+        # count toward this stream's presence in it
+        xf = {
+            f"xf_{d}": jnp.where(sched, 0.0, c[f"xf_{d}"])
+            for d in range(1, XMERGE_D + 1)
+        }
+        cur_xf = jnp.where(sched, 0.0, c["cur_xf"] + wfrac)
+
+        ovf = c["ovf"] | bb_ovf | (bb_trig & (rem > 0))
+        return {
+            "rem": rem, "ovf": ovf, "clock": clock, "pause": pause,
+            "blocked": blocked, "b_ssd": b_ssd, "flushes": flushes,
+            "a_used": a_used, "s_used": s_used, "a_fs": a_fs,
+            "j_left": j_left, "j_rate": j_rate, "j_alive": j_alive,
+            "cur_xf": cur_xf, **xf,
+        }
+
+    # HDD-routed streams and capacity-less lanes (orangefs) must never
+    # enter the loop: a vmapped while_loop spins until EVERY lane's
+    # condition clears, and a cap=0 lane would make no progress
+    init = {
+        "rem": jnp.where(dev_ssd & (cap > 0), nb, 0),
+        "ovf": jnp.asarray(False),
+        "clock": st["clock"], "pause": st["pause"],
+        "blocked": st["blocked"], "b_ssd": st["b_ssd"],
+        "flushes": st["flushes"], "a_used": st["a_used"],
+        "s_used": st["s_used"], "a_fs": st["a_fs"],
+        "j_left": st["j_left"], "j_rate": st["j_rate"],
+        "j_alive": st["j_alive"],
+        "cur_xf": jnp.zeros_like(st["a_fs"]),
+        **{f"xf_{d}": st[f"xf_{d}"] for d in range(1, XMERGE_D + 1)},
+    }
+    return lax.while_loop(cond, body, init)
+
+
+def _hdd_advance(g, c, hdd_b, nb, ev, allowed):
+    """Foreground HDD write of ``hdd_b`` bytes (whole stream or BB
+    overflow suffix), Eq. 7 interference with a concurrent flush.
+
+    The HDD wall for a *suffix* of a stream is not proportional to its
+    bytes — the oracle re-scores the overflow tail from scratch, and a
+    strided tail loses the sorted contiguity of the whole stream.  The
+    event tape carries ``SUFFIX_ANCHORS + 1`` precomputed suffix walls
+    (anchor j = suffix keeping the last ``1 - j/A`` fraction of
+    requests); we hat-weight interpolate between the two neighbouring
+    anchors.  frac = 1 lands exactly on anchor 0, which is built from
+    the stream scores, so pure-HDD whole streams stay bit-exact."""
+
+    nb_f = jnp.maximum(nb, 1).astype(jnp.float64)
+    frac = hdd_b.astype(jnp.float64) / nb_f
+    pos = (1.0 - frac) * SUFFIX_ANCHORS
+    dt = jnp.zeros_like(frac)
+    for j in range(SUFFIX_ANCHORS + 1):
+        w = jnp.maximum(0.0, 1.0 - jnp.abs(pos - j))
+        dt = dt + w * ev[f"hddt_{j}"]
+    net = ev["net_t"] * frac
+    do = hdd_b > 0
+    flushing = c["j_alive"]
+    adv = flushing & allowed
+    wall_alone = jnp.maximum(net, dt)
+    wall_shared = jnp.maximum(net, dt * g["slowdown"])
+    wall = jnp.where(adv, wall_shared, wall_alone)
+    prog = c["j_rate"] * g["flush_frac"] * wall
+    completed = do & adv & (prog >= c["j_left"])
+    j_left = jnp.where(
+        completed,
+        0.0,
+        jnp.where(do & adv, c["j_left"] - prog, c["j_left"]),
+    )
+    return {
+        **c,
+        "clock": c["clock"] + jnp.where(do, wall, 0.0),
+        "pause": c["pause"]
+        + jnp.where(do & flushing & ~adv, wall_alone, 0.0),
+        "b_hdd": c["b_hdd"] + hdd_b,
+        "flushes": c["flushes"] + _i32(completed),
+        "s_used": jnp.where(completed, 0, c["s_used"]),
+        "j_alive": c["j_alive"] & ~completed,
+        "j_left": j_left,
+    }
+
+
+def _gap_step(st, sec):
+    """Compute phase: the flusher gets the HDD to itself (Eq. 6 rate)."""
+
+    need = st["j_left"] / st["j_rate"]
+    full = st["j_alive"] & (need <= sec)
+    partial = st["j_alive"] & ~full
+    j_left = jnp.where(
+        full, 0.0,
+        jnp.where(partial, st["j_left"] - st["j_rate"] * sec, st["j_left"]),
+    )
+    return {
+        **st,
+        "clock": st["clock"] + sec,
+        "gap": st["gap"] + sec,
+        "flushes": st["flushes"] + _i32(full),
+        "s_used": jnp.where(full, 0, st["s_used"]),
+        "j_alive": st["j_alive"] & ~full,
+        "j_left": j_left,
+    }
+
+
+def _stream_step(g, lane, st, ev):
+    """One stream event for one lane (all schemes, flag-selected)."""
+
+    scheme = lane["scheme"]
+    is_tworeg = (scheme == 2) | (scheme == 3)
+
+    dev_ssd, allowed, upd = _observe_and_route(g, lane, st, ev["pct"])
+
+    c = _ssd_fill_loop(g, lane, st, ev, allowed, dev_ssd)
+    # bytes headed to the HDD in the foreground: the whole stream when
+    # HDD-routed, the unbuffered suffix when plain BB overflows
+    hdd_b = jnp.where(
+        dev_ssd, jnp.where(c["ovf"], c["rem"], 0), ev["nbytes"]
+    )
+    # SSD-path state only applies to SSD-routed streams
+    base = {
+        k: jnp.where(dev_ssd, c[k], st[k])
+        for k in ("clock", "pause", "blocked", "b_ssd", "flushes",
+                  "a_used", "s_used", "a_fs", "j_left", "j_rate",
+                  "j_alive")
+    }
+    base["b_hdd"] = st["b_hdd"]
+    base["gap"] = st["gap"]
+    base["peak"] = st["peak"]
+
+    out = _hdd_advance(g, base, hdd_b, ev["nbytes"], ev, allowed)
+    # shift the cross-merge partner window one stream: this stream's
+    # active-region fraction enters at distance 1 (an HDD-routed stream
+    # enters as 0 — its bytes never reached the region)
+    out["xf_1"] = jnp.where(dev_ssd, c["cur_xf"], 0.0)
+    for d in range(2, XMERGE_D + 1):
+        out[f"xf_{d}"] = jnp.where(
+            dev_ssd, c[f"xf_{d - 1}"], st[f"xf_{d - 1}"]
+        )
+    # the oracle samples occupancy at END of stream — after the overflow
+    # HDD writes, during which the flush may complete and reset the
+    # region — so sample post-advance state
+    out["peak"] = jnp.where(
+        dev_ssd,
+        jnp.maximum(st["peak"], out["a_used"] + out["s_used"]),
+        st["peak"],
+    )
+    # threshold/routing state evolves on every stream of a threshold
+    # scheme (observe happens whichever device served the stream)
+    for k, v in upd.items():
+        out[k] = jnp.where(is_tworeg, v, st[k])
+    for k in ("win", "win_n", "win_p", "static_rand", "cur_ssd"):
+        out.setdefault(k, st[k])
+    return out
+
+
+def _event_step(g, lane, st, ev):
+    """The per-lane transition: gap, stream, or padded no-op."""
+
+    strm = _stream_step(g, lane, st, ev)
+    gap = _gap_step(st, ev["gap_sec"])
+    pick = lambda a, b, c_: jnp.where(
+        ev["valid"], jnp.where(ev["is_gap"], a, b), c_
+    )
+    return {k: pick(gap[k], strm[k], st[k]) for k in st}
+
+
+def _final_drain(g, st):
+    """End-of-trace drain (vectorized over lanes): finish the in-flight
+    job, then flush the still-buffered active region (Eq. 6)."""
+
+    d1 = jnp.where(st["j_alive"], st["j_left"] / st["j_rate"], 0.0)
+    has_active = st["a_used"] > 0
+    a_f = st["a_used"].astype(jnp.float64)
+    d2 = jnp.where(
+        has_active,
+        st["a_fs"] * g["seek_time"] + a_f / g["seq_bw"],
+        0.0,
+    )
+    total = st["clock"] + d1 + d2
+    return {
+        "io_seconds": st["clock"] - st["gap"],
+        "total_seconds": total,
+        "bytes_to_ssd": st["b_ssd"],
+        "bytes_to_hdd_direct": st["b_hdd"],
+        "flushes": st["flushes"] + _i32(st["j_alive"]) + _i32(has_active),
+        "flush_paused_seconds": st["pause"],
+        "blocked_seconds": st["blocked"],
+        "peak_ssd_occupancy": st["peak"],
+    }
+
+
+def _replay_program(g, lanes, state0, events):
+    def scan_step(st, ev):
+        new = jax.vmap(
+            lambda lane, s, e: _event_step(g, lane, s, e)
+        )(lanes, st, ev)
+        return new, None
+
+    final, _ = lax.scan(scan_step, state0, events)
+    return _final_drain(g, final)
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_program():
+    return jax.jit(_replay_program)
+
+
+def _globals(
+    hdd: HDDModel, interference: InterferenceModel
+) -> dict[str, np.float64]:
+    return {
+        "seek_time": np.float64(hdd.seek_time),
+        "seq_bw": np.float64(hdd.seq_bw),
+        "slowdown": np.float64(interference.foreground_slowdown()),
+        "flush_frac": np.float64(interference.flush_rate_fraction()),
+        "default_thr": np.float64(DEFAULT_THRESHOLD),
+        "static_high": np.float64(0.45),
+        "static_low": np.float64(0.30),
+    }
+
+
+def replay_lanes(
+    events: Mapping[str, np.ndarray],
+    lanes: Mapping[str, np.ndarray],
+    state0: Mapping[str, np.ndarray],
+    hdd: HDDModel | None = None,
+    interference: InterferenceModel | None = None,
+) -> dict[str, np.ndarray]:
+    """Run every lane's replay in one jitted device call.
+
+    ``events`` is the stacked ``(S, L)`` tape (:func:`stack_events`),
+    ``lanes``/``state0`` are stacked ``(L,)``/``(L, ...)`` structs.
+    Returns per-lane result arrays (io/total seconds, byte splits, flush
+    and pause counters, peak occupancy) as host numpy.
+    """
+
+    _require_jax()
+    g = _globals(hdd or HDDModel(), interference or InterferenceModel())
+    with enable_x64():
+        out = _jitted_program()(
+            g, dict(lanes), dict(state0), dict(events)
+        )
+        return {k: np.asarray(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# single-lane entry point (IONodeSimulator engine="device")
+# ---------------------------------------------------------------------------
+
+
+def per_app_bytes(batch) -> dict[int, int]:
+    """Per-app byte totals (order-independent, scheme-independent)."""
+
+    if not batch.num_requests:
+        return {}
+    apps, inverse = np.unique(batch.app_ids, return_inverse=True)
+    sums = np.zeros(len(apps), dtype=np.int64)
+    np.add.at(sums, inverse, batch.sizes)
+    return {int(a): int(s) for a, s in zip(apps, sums)}
+
+
+def simulate_device(
+    batch,
+    scores,
+    scheme: str = "ssdup+",
+    ssd_capacity: int = 8 << 30,
+    hdd: HDDModel | None = None,
+    ssd: SSDModel | None = None,
+    link: IngestLink | None = None,
+    interference: InterferenceModel | None = None,
+    stream_len: int = DEFAULT_STREAM_LEN,
+    flush_gate: float = 0.5,
+    adaptive_window: int = 64,
+    threshold_warmup: Sequence[float] | None = None,
+):
+    """Replay one shard on one lane; returns a
+    :class:`~repro.core.simulator.SimResult` (see the module docstring
+    for the accuracy contract vs the numpy engines)."""
+
+    from .simulator import SimResult  # deferred: simulator imports us lazily
+
+    _require_jax()
+    tape = build_events(
+        batch, scores, stream_len=stream_len, hdd=hdd, ssd=ssd, link=link
+    )
+    events = stack_events([tape])
+    lanes = _stack_lanes([lane_consts(scheme, ssd_capacity, flush_gate)])
+    state0 = _stack_lanes(
+        [initial_lane_state(scheme, adaptive_window, threshold_warmup)]
+    )
+    out = replay_lanes(events, lanes, state0, hdd=hdd,
+                       interference=interference)
+    b_ssd = int(out["bytes_to_ssd"][0])
+    b_hdd = int(out["bytes_to_hdd_direct"][0])
+    return SimResult(
+        scheme=scheme,
+        io_seconds=float(out["io_seconds"][0]),
+        total_seconds=float(out["total_seconds"][0]),
+        total_bytes=b_ssd + b_hdd,
+        bytes_to_ssd=b_ssd,
+        bytes_to_hdd_direct=b_hdd,
+        flushes=int(out["flushes"][0]),
+        flush_paused_seconds=float(out["flush_paused_seconds"][0]),
+        blocked_seconds=float(out["blocked_seconds"][0]),
+        peak_ssd_occupancy=int(out["peak_ssd_occupancy"][0]),
+        metadata_bytes=0,
+        per_app_bytes=per_app_bytes(batch),
+    )

@@ -164,6 +164,37 @@ def stream_stats_batch(offsets, sizes):
     return rf, pct, dist
 
 
+def stream_stats_batch64(offsets, sizes):
+    """Exact int64/float64 device scoring — bit-equal to the numpy oracle.
+
+    Same math as :func:`stream_stats_batch`, run under a scoped
+    ``jax.experimental.enable_x64`` so offsets/sizes ride true int64 lanes
+    and the percentage divides in float64.  This removes BOTH device-dtype
+    caveats: offsets above 2 GiB no longer truncate, and the seek-distance
+    sum accumulates as int64 with no float32 rounding.  ``(M, N)`` ->
+    ``(rf int64, percentage float64, seek_distance int64)``.
+
+    The scope is per-call: the global jax x64 flag is untouched, so f32
+    kernels elsewhere in the process are unaffected.
+    """
+
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        offs = jnp.asarray(np.asarray(offsets, dtype=np.int64))
+        szs = jnp.broadcast_to(
+            jnp.asarray(np.asarray(sizes, dtype=np.int64)), offs.shape)
+        n = offs.shape[-1]
+        order = jnp.argsort(offs, axis=-1, stable=True)
+        so = jnp.take_along_axis(offs, order, axis=-1)
+        ss = jnp.take_along_axis(szs, order, axis=-1)
+        resid = so[..., 1:] - so[..., :-1] - ss[..., :-1]
+        rf = jnp.sum((resid != 0).astype(jnp.int64), axis=-1)
+        pct = rf.astype(jnp.float64) / max(n - 1, 1)
+        dist = jnp.sum(jnp.abs(resid), axis=-1)
+        return rf, pct, dist
+
+
 def stream_stats_batch_np(offsets, sizes):
     """Vectorized host-side scoring of many streams at once (int64, exact).
 

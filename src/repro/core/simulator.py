@@ -83,7 +83,7 @@ from .trace import (
     compute_stream_scores,
 )
 
-ENGINES = ("batched", "per-request")
+ENGINES = ("batched", "per-request", "device")
 
 
 def _seq_add(start: float, values: np.ndarray) -> float:
@@ -177,6 +177,13 @@ class IONodeSimulator:
         self.interference = interference or InterferenceModel()
         self.stream_len = stream_len
         self.ssd_capacity = ssd_capacity
+        # kept for the device engine, which rebuilds its lane state from
+        # these instead of the host pipeline/redirector objects below
+        self.flush_gate = flush_gate
+        self.adaptive_window = adaptive_window
+        self.threshold_warmup = (
+            None if threshold_warmup is None else list(threshold_warmup)
+        )
 
         self._last_pct = 0.0
         if scheme == "ssdup+":
@@ -322,13 +329,30 @@ class IONodeSimulator:
                 f"scores computed for stream_len={scores.stream_len}, "
                 f"simulator uses {self.stream_len}"
             )
-        if self.engine == "batched":
+        if self.engine in ("batched", "device"):
             batch = (
                 trace if isinstance(trace, TraceBatch)
                 else TraceBatch.from_items(trace)
             )
             if scores is None:
                 scores = compute_stream_scores(batch, self.stream_len)
+            if self.engine == "device":
+                from . import engine_device  # deferred: needs jax
+
+                return engine_device.simulate_device(
+                    batch,
+                    scores,
+                    scheme=self.scheme,
+                    ssd_capacity=self.ssd_capacity,
+                    hdd=self.hdd,
+                    ssd=self.ssd,
+                    link=self.link,
+                    interference=self.interference,
+                    stream_len=self.stream_len,
+                    flush_gate=self.flush_gate,
+                    adaptive_window=self.adaptive_window,
+                    threshold_warmup=self.threshold_warmup,
+                )
             return self._run_batched(batch, scores)
         items = trace.to_items() if isinstance(trace, TraceBatch) else trace
         return self._run_scalar(items, scores)

@@ -18,18 +18,20 @@ fleet layer (:mod:`repro.core.fleet`):
 * :func:`compute_stream_scores` — scoring entry point with three backends:
   ``numpy`` (vectorized ``int64`` host math, bit-exact against the scalar
   definitions — the default and the oracle), ``jnp`` (one device call via
-  :func:`repro.core.random_factor.stream_stats_batch`), and ``pallas``
-  (the ``repro.kernels.stream_rf`` TPU kernel as the random-factor fast
-  path).  Device backends use ``int32`` lanes (offsets must fit below
-  2 GiB; the seek-distance sum is float32-accumulated — see
-  :func:`repro.core.random_factor.stream_stats_batch`) and fall back to
+  :func:`repro.core.random_factor.stream_stats_batch64` under a scoped
+  x64 enable — int64 lanes, float64 division, bit-exact at any offset
+  magnitude), and ``pallas`` (the fused ``repro.kernels.stream_rf``
+  TPU kernel; int32 lanes, so traces with offsets/sizes above 2 GiB fall
+  back to the exact host path, and the float32 seek-distance sum is
+  rounded back to integer bytes).  Both device backends fall back to
   ``numpy`` automatically when jax is absent.
 
 Stream grouping follows :class:`repro.core.random_factor.StreamGrouper`
 semantics exactly: requests are blocked in arrival order into windows of
-``stream_len``; gaps do NOT flush a partial window; a trailing partial
-stream is scored on the host (device kernels want the fixed power-of-two
-window).
+``stream_len``; gaps do NOT flush a partial window.  The trailing partial
+stream is padded into a score-neutral fixed-shape row
+(:meth:`TraceBatch.padded_stream_matrix`) so device backends score it in
+the same dispatch as the full windows.
 """
 
 from __future__ import annotations
@@ -253,6 +255,40 @@ class TraceBatch:                               # __eq__ would raise
             self.sizes[full:],
         )
 
+    def padded_stream_matrix(
+        self, stream_len: int = DEFAULT_STREAM_LEN
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(offsets (S, L), sizes (S, L), true_lens (S,))`` — every stream
+        as a fixed-shape row, the trailing partial padded to ``stream_len``.
+
+        The padding is a *score-neutral contiguous run*: zero-size requests
+        placed at ``sorted_last.offset + sorted_last.size``.  After the
+        offset sort the pad block lands strictly past every real request;
+        the (real_last, pad_0) gap equals the real last request's size and
+        the pad-pad gaps are zero-against-zero-size, so Eq. 1 counts no
+        extra seek and the seek-distance residuals are all zero.  Device
+        kernels can therefore score the whole matrix — tail included — in
+        one fixed-shape dispatch, with only the percentage denominator
+        (``true_lens - 1``) applied host-side.
+        """
+
+        offs2d, szs2d, tail_offs, tail_szs = self.stream_matrix(stream_len)
+        lens = np.full(offs2d.shape[0], stream_len, dtype=np.int64)
+        t = tail_offs.size
+        if t:
+            # sorted-last real request = LAST occurrence of the max offset
+            # (stable sort keeps arrival order among equal offsets)
+            j = t - 1 - int(np.argmax(tail_offs[::-1]))
+            pad_off = int(tail_offs[j]) + int(tail_szs[j])
+            row_o = np.concatenate(
+                [tail_offs, np.full(stream_len - t, pad_off, dtype=np.int64)])
+            row_s = np.concatenate(
+                [tail_szs, np.zeros(stream_len - t, dtype=np.int64)])
+            offs2d = np.vstack([offs2d, row_o[None, :]])
+            szs2d = np.vstack([szs2d, row_s[None, :]])
+            lens = np.append(lens, t)
+        return offs2d, szs2d, lens
+
 
 # ---------------------------------------------------------------------------
 # batched per-stream scoring
@@ -287,36 +323,43 @@ SCORE_BACKENDS = ("numpy", "jnp", "pallas")
 _INT32_MAX = np.int64(2**31 - 1)
 
 
-def _score_full_streams_device(
-    offs2d: np.ndarray, szs2d: np.ndarray, backend: str
+def _score_streams_device(
+    offs2d: np.ndarray, szs2d: np.ndarray, lens: np.ndarray, backend: str
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Score the (M, L) full-stream block on device; int32 lanes."""
+    """Score the padded (S, L) stream matrix on device.
+
+    ``lens`` holds each row's TRUE request count (< L only for the padded
+    trailing partial); the percentage denominator uses it host-side in
+    float64, so ``pct`` is bit-equal to the numpy oracle's division for
+    every backend.
+
+    ``jnp`` runs :func:`repro.core.random_factor.stream_stats_batch64`
+    under a scoped x64 enable — int64 lanes, float64 division — and is
+    bit-exact at any offset magnitude.  ``pallas`` keeps the kernel's
+    int32/float32 lanes: offsets or sizes above 2 GiB would TRUNCATE into
+    wrong seek counts (not just imprecise ones), so those traces fall back
+    to the exact host path, and the float32 distance sum is rounded back
+    to integer bytes.
+    """
 
     from . import random_factor as rf_mod
 
-    if (
-        rf_mod.jnp is None  # jax absent: take the exact host path
-        # int32 lanes would truncate large offsets into WRONG scores (not
-        # just imprecise ones); paper-scale volumes exceed 2 GiB offsets,
-        # so route those to the exact host path too
-        or np.abs(offs2d).max(initial=0) > _INT32_MAX
+    pallas_overflow = backend == "pallas" and (
+        np.abs(offs2d).max(initial=0) > _INT32_MAX
         or szs2d.max(initial=0) > _INT32_MAX
-    ):
-        rf, pct, dist = stream_stats_batch_np(offs2d, szs2d)
-        return rf, pct, dist
-    if backend == "pallas":
+    )
+    if rf_mod.jnp is None or pallas_overflow:
+        rf, _, dist = stream_stats_batch_np(offs2d, szs2d)
+    elif backend == "pallas":
         from repro.kernels.stream_rf.ops import stream_stats_op
 
-        rf, pct, dist = stream_stats_op(offs2d, szs2d)
+        rf, _, dist = stream_stats_op(offs2d, szs2d)
     else:
-        rf, pct, dist = rf_mod.stream_stats_batch(offs2d, szs2d)
-    return (
-        np.asarray(rf, dtype=np.int64),
-        np.asarray(pct, dtype=np.float64),
-        # device backends accumulate the distance in float32 (int32 would
-        # wrap); round back to the integer byte count
-        np.rint(np.asarray(dist, dtype=np.float64)).astype(np.int64),
-    )
+        rf, _, dist = rf_mod.stream_stats_batch64(offs2d, szs2d)
+    rf = np.asarray(rf, dtype=np.int64)
+    pct = rf / np.maximum(lens - 1, 1)
+    dist = np.rint(np.asarray(dist, dtype=np.float64)).astype(np.int64)
+    return rf, pct, dist
 
 
 def compute_stream_scores(
@@ -328,41 +371,43 @@ def compute_stream_scores(
 
     ``backend="numpy"`` (default) is bit-exact against the scalar
     ``stream_percentage`` / ``sorted_seek_distance`` path and needs no
-    accelerator.  ``"jnp"`` runs the whole block as one device call;
-    ``"pallas"`` additionally routes the random-factor sum through the
-    ``stream_rf`` bitonic-sort kernel (requires power-of-two
-    ``stream_len``).  The trailing partial stream is always scored on the
-    host.
+    accelerator.  ``"jnp"`` runs every stream — trailing partial included,
+    via the score-neutral padding of :meth:`TraceBatch.padded_stream_matrix`
+    — as ONE device call under a scoped x64 enable, bit-exact against the
+    oracle.  ``"pallas"`` routes the same padded matrix through the fused
+    ``stream_rf`` bitonic-sort kernel (int32 lanes: requires power-of-two
+    ``stream_len`` and offsets below 2 GiB, else it falls back to the exact
+    host path).
     """
 
     if backend not in SCORE_BACKENDS:
         raise ValueError(f"backend must be one of {SCORE_BACKENDS}, got {backend!r}")
     batch = trace if isinstance(trace, TraceBatch) else TraceBatch.from_items(trace)
-    offs2d, szs2d, tail_offs, tail_szs = batch.stream_matrix(stream_len)
+    nbytes, osum = batch.stream_sums(stream_len)
 
-    if offs2d.shape[0]:
-        if backend == "numpy":
+    if backend == "numpy":
+        offs2d, szs2d, tail_offs, tail_szs = batch.stream_matrix(stream_len)
+        if offs2d.shape[0]:
             rf, pct, dist = stream_stats_batch_np(offs2d, szs2d)
         else:
-            rf, pct, dist = _score_full_streams_device(offs2d, szs2d, backend)
-        nbytes = szs2d.sum(axis=1)
-        osum = offs2d.sum(axis=1)
+            rf = np.zeros(0, dtype=np.int64)
+            pct = np.zeros(0, dtype=np.float64)
+            dist = np.zeros(0, dtype=np.int64)
+        if tail_offs.size:
+            trf, tpct, tdist = stream_stats_batch_np(
+                tail_offs[None, :], tail_szs[None, :]
+            )
+            rf = np.concatenate([rf, trf])
+            pct = np.concatenate([pct, tpct])
+            dist = np.concatenate([dist, tdist])
     else:
-        rf = np.zeros(0, dtype=np.int64)
-        pct = np.zeros(0, dtype=np.float64)
-        dist = np.zeros(0, dtype=np.int64)
-        nbytes = np.zeros(0, dtype=np.int64)
-        osum = np.zeros(0, dtype=np.int64)
-
-    if tail_offs.size:
-        trf, tpct, tdist = stream_stats_batch_np(
-            tail_offs[None, :], tail_szs[None, :]
-        )
-        rf = np.concatenate([rf, trf])
-        pct = np.concatenate([pct, tpct])
-        dist = np.concatenate([dist, tdist])
-        nbytes = np.concatenate([nbytes, [int(tail_szs.sum())]])
-        osum = np.concatenate([osum, [int(tail_offs.sum())]])
+        offs_p, szs_p, lens = batch.padded_stream_matrix(stream_len)
+        if offs_p.shape[0]:
+            rf, pct, dist = _score_streams_device(offs_p, szs_p, lens, backend)
+        else:
+            rf = np.zeros(0, dtype=np.int64)
+            pct = np.zeros(0, dtype=np.float64)
+            dist = np.zeros(0, dtype=np.int64)
 
     return StreamScores(
         rf_sum=rf,

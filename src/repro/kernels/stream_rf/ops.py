@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.stream_rf.kernel import stream_rf
+from repro.kernels.stream_rf.kernel import stream_rf, stream_stats
 
 
 def _on_tpu() -> bool:
@@ -33,24 +33,25 @@ def random_percentage_op(offsets, sizes, **kw) -> jax.Array:
     return s.astype(jnp.float32) / max(n - 1, 1)
 
 
-def stream_stats_op(offsets, sizes, **kw) -> tuple[jax.Array, jax.Array, jax.Array]:
+def stream_stats_op(offsets, sizes, block_streams: int = 256,
+                    interpret: bool | None = None,
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Kernel-backed per-stream stats: ``(M, N) -> (rf, pct, dist)``.
 
-    The Eq. 1 seek count comes from the bitonic-sort Pallas kernel; the
-    seek-distance aggregate (which the kernel does not emit) is one extra
-    sorted-residual reduction in plain jnp, accumulated in float32 so it
-    cannot wrap int32 (see ``stream_stats_batch``'s dtype notes).  Matches
+    Both the Eq. 1 seek count and the Eq. 6 seek-distance aggregate come
+    out of ONE fused bitonic-sort dispatch (``kernel.stream_stats``) — the
+    sort dominates and is shared, so there is no second jnp argsort pass.
+    The distance is float32-accumulated so it cannot wrap int32 (see
+    ``stream_stats_batch``'s dtype notes).  Matches
     ``repro.core.random_factor.stream_stats_batch`` elementwise.
     """
 
+    if interpret is None:
+        interpret = not _on_tpu()
     offsets = jnp.asarray(offsets, jnp.int32)
     szs = jnp.broadcast_to(jnp.asarray(sizes, jnp.int32), offsets.shape)
     n = offsets.shape[-1]
-    rf = stream_rf_op(offsets, szs, **kw)
+    rf, dist = stream_stats(offsets, szs, block_streams=block_streams,
+                            interpret=interpret)
     pct = rf.astype(jnp.float32) / max(n - 1, 1)
-    order = jnp.argsort(offsets, axis=-1, stable=True)
-    so = jnp.take_along_axis(offsets, order, axis=-1)
-    ss = jnp.take_along_axis(szs, order, axis=-1)
-    resid = so[..., 1:] - so[..., :-1] - ss[..., :-1]
-    dist = jnp.sum(jnp.abs(resid).astype(jnp.float32), axis=-1)
     return rf, pct, dist

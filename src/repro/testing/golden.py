@@ -5,8 +5,13 @@ replay: the trace is rebuilt from :mod:`repro.testing.traces` (never
 stored), the expected :class:`FleetResult` is stored field-by-field as
 JSON.  Python floats round-trip exactly through JSON (``repr`` is
 shortest-round-trip), so fixture comparison is bit-exact — any drift in
-either replay engine, either extent-index backend, the scoring path, or
-the timing model trips a golden test.
+either numpy replay engine, either extent-index backend, the scoring
+path, or the timing model trips a golden test.  The device engine is
+stream-granular and compares through *tolerance tiers* instead: each
+fixture embeds the ``device_tolerance`` table it was verified against
+(``field -> [rtol, atol]``, ``[0, 0]`` = exact), and
+``tests/test_engine_device.py`` replays the matrix under
+``engine="device"`` with that embedded contract.
 
 The diff reporter walks fields in **causal order** — routing inputs
 before byte accounting before flush counters before clocks — across all
@@ -115,23 +120,58 @@ def _normalize(field: str, value):
     return value
 
 
-def diff_sim(expected: dict, actual: dict, prefix: str = "") -> list[str]:
+def _within(e, a, rtol: float, atol: float) -> bool:
+    """One value within ``max(rtol*|e|, atol)`` — dicts compare per key."""
+
+    if isinstance(e, dict) or isinstance(a, dict):
+        if not isinstance(e, dict) or not isinstance(a, dict):
+            return False
+        if e.keys() != a.keys():
+            return False
+        return all(_within(e[k], a[k], rtol, atol) for k in e)
+    if isinstance(e, str) or isinstance(a, str):
+        return e == a
+    return abs(a - e) <= max(rtol * abs(e), atol)
+
+
+def _field_matches(field: str, e, a, tolerances) -> bool:
+    """Bit-exact unless ``tolerances`` carries a tier for this field.
+
+    ``tolerances`` maps ``field -> (rtol, atol)`` — the tolerance-tiered
+    comparison mode used for the device engine, whose documented
+    approximations (:data:`repro.core.engine_device.DEVICE_TOLERANCES`)
+    are bounded but not bit-exact.  A ``(0.0, 0.0)`` tier degenerates to
+    exact equality, so the table is self-documenting about which fields
+    the device engine reproduces exactly.
+    """
+
+    if not tolerances or field not in tolerances:
+        return e == a
+    rtol, atol = tolerances[field]
+    return _within(e, a, float(rtol), float(atol))
+
+
+def diff_sim(expected: dict, actual: dict, prefix: str = "",
+             tolerances: dict | None = None) -> list[str]:
     """All diverging SimResult fields, causally ordered."""
 
     out = []
     for field in CAUSAL_FIELD_ORDER:
         e = _normalize(field, expected[field])
         a = _normalize(field, actual[field])
-        if e != a:
+        if not _field_matches(field, e, a, tolerances):
             out.append(f"{prefix}{field}: expected {e!r}, got {a!r}")
     return out
 
-def diff_fleet(expected: dict, actual: dict) -> list[str]:
+def diff_fleet(expected: dict, actual: dict,
+               tolerances: dict | None = None) -> list[str]:
     """Diverging fields across a fleet snapshot, causally ordered.
 
     Field-major scan: a routing divergence on *any* node is reported
     before a clock divergence on any other, because the former causes
-    the latter.
+    the latter.  ``tolerances`` (``field -> (rtol, atol)``) switches the
+    named fields from bit-exact to within-tolerance comparison — the
+    mode the device-engine parity tests run in.
     """
 
     out = []
@@ -150,7 +190,7 @@ def diff_fleet(expected: dict, actual: dict) -> list[str]:
     for field in CAUSAL_FIELD_ORDER:
         for i, (e, a) in enumerate(zip(exp_nodes, act_nodes)):
             ef, af = _normalize(field, e[field]), _normalize(field, a[field])
-            if ef != af:
+            if not _field_matches(field, ef, af, tolerances):
                 out.append(
                     f"node[{i}].{field}: expected {ef!r}, got {af!r}"
                 )
@@ -185,6 +225,21 @@ def _node_capacity(total_bytes: int) -> int:
     return total_bytes // FIXTURE_NODES // 2
 
 
+def device_tolerance_metadata() -> dict[str, list[float]]:
+    """The device engine's documented tolerance table, JSON-shaped.
+
+    Embedded into every fixture at ``--write`` time so the fixture file
+    records the accuracy contract its device replay was verified against
+    (``tests/test_engine_device.py`` asserts against the embedded copy,
+    not the live table — a tolerance loosening therefore shows up as a
+    fixture diff, reviewable like any behavior change).
+    """
+
+    from repro.core.engine_device import DEVICE_TOLERANCES
+
+    return {f: [float(r), float(a)] for f, (r, a) in DEVICE_TOLERANCES.items()}
+
+
 def make_fixture(scheme: str, workload: str, policy: str,
                  engine: str = "batched") -> dict:
     """Run one fixture configuration and build its JSON payload."""
@@ -203,6 +258,7 @@ def make_fixture(scheme: str, workload: str, policy: str,
         },
         "trace": trace_fingerprint(batch),
         "result": fleet_result_to_dict(fr),
+        "device_tolerance": device_tolerance_metadata(),
     }
 
 
@@ -251,8 +307,17 @@ def replay_fixture(payload: dict, engine: str | None = None,
                 engine or key["engine"], index_backend)
 
 
-def check_fixture(payload: dict, result: FleetResult) -> list[str]:
-    return diff_fleet(payload["result"], fleet_result_to_dict(result))
+def check_fixture(payload: dict, result: FleetResult,
+                  tolerances: dict | None = None) -> list[str]:
+    """Causally ordered divergences of ``result`` vs the stored snapshot.
+
+    Bit-exact by default (the numpy engines' contract); pass
+    ``tolerances=payload["device_tolerance"]`` to compare a device-engine
+    replay against its documented accuracy tiers instead.
+    """
+
+    return diff_fleet(payload["result"], fleet_result_to_dict(result),
+                      tolerances=tolerances)
 
 
 def generate_all(directory: pathlib.Path | None = None,

@@ -1,11 +1,15 @@
 """Scoring-backend parity: ``jnp`` and ``pallas`` vs the numpy oracle.
 
 ``compute_stream_scores`` has three backends; the numpy path is the
-int64 bit-exact oracle, the device paths run int32 lanes with float32
-distance accumulation.  These tests pin both device backends to the
-oracle on non-trivial traces (mixed patterns, ragged tail, multi-MiB
-offsets) so the currently 1.0x-speedup kernel cannot silently diverge
-before the device-resident replay work lands.
+int64 bit-exact oracle.  The ``jnp`` backend runs under a scoped x64
+enable (int64 lanes, float64 division) and must be BIT-EXACT on every
+field at any offset magnitude; the ``pallas`` backend keeps the fused
+kernel's int32/float32 lanes, so its seek count and percentage are exact
+while the seek distance carries float32 accumulation rounding.  Both
+backends score the trailing partial stream on device via the
+score-neutral padded row (``TraceBatch.padded_stream_matrix``), and
+traces whose offsets overflow the kernel's int32 lanes fall back to the
+exact host path.
 
 Requires jax: without it the device backends silently fall back to the
 host path and parity would be vacuous.
@@ -39,8 +43,8 @@ def _nontrivial_batch(tail: int = 0) -> TraceBatch:
     if tail:
         items = items[:-tail]
     batch = TraceBatch.from_items(items)
-    # parity is only meaningful on the device path: offsets must fit the
-    # kernel's int32 lanes or the backend falls back to the host
+    # keep offsets inside the pallas kernel's int32 lanes so this exercises
+    # the kernel itself, not the overflow fallback (tested separately)
     assert int(batch.offsets.max()) < np.iinfo(np.int32).max
     return batch
 
@@ -65,16 +69,24 @@ def _assert_parity(batch, backend):
         np.asarray(scores.rf_sum, dtype=np.int64),
         np.asarray(oracle.rf_sum, dtype=np.int64),
         err_msg=f"{backend}: rf_sum diverged from numpy oracle")
-    # percentage = rf / (len-1): float32 division vs float64
-    np.testing.assert_allclose(
-        scores.percentage, oracle.percentage, rtol=1e-6, atol=1e-7,
+    # percentage = rf / (true_len - 1), divided host-side in float64 for
+    # every backend — bit-exact, including the padded trailing partial
+    np.testing.assert_array_equal(
+        scores.percentage, oracle.percentage,
         err_msg=f"{backend}: percentage diverged")
-    # seek distance accumulates |sorted diffs| in float32 on device
-    np.testing.assert_allclose(
-        scores.seek_distance, oracle.seek_distance, rtol=1e-5,
-        err_msg=f"{backend}: seek_distance diverged")
+    if backend == "jnp":
+        # int64 lanes under scoped x64: the distance sum is exact too
+        np.testing.assert_array_equal(
+            scores.seek_distance, oracle.seek_distance,
+            err_msg="jnp: seek_distance diverged (x64 path must be exact)")
+    else:
+        # the pallas kernel accumulates |sorted residual| in float32
+        np.testing.assert_allclose(
+            scores.seek_distance, oracle.seek_distance, rtol=1e-5,
+            err_msg=f"{backend}: seek_distance diverged")
     # byte sums are exact in every backend
     np.testing.assert_array_equal(scores.nbytes, oracle.nbytes)
+    np.testing.assert_array_equal(scores.offset_sum, oracle.offset_sum)
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
@@ -87,6 +99,52 @@ def test_backend_matches_oracle_ragged_tail(ragged_batch, backend):
     _assert_parity(ragged_batch, backend)
 
 
+def test_padded_tail_is_score_neutral(ragged_batch):
+    """The padded row the device backends score must carry the tail's exact
+    statistics: same rf/dist as the unpadded host scoring of the tail."""
+
+    offs_p, szs_p, lens = ragged_batch.padded_stream_matrix(STREAM_LEN)
+    assert offs_p.shape == (len(lens), STREAM_LEN)
+    assert lens[-1] < STREAM_LEN  # this fixture really has a partial tail
+    assert (lens[:-1] == STREAM_LEN).all()
+    # pad block sorts strictly after (or tied with) every real request and
+    # contributes zero-size contiguous records
+    t = int(lens[-1])
+    assert (szs_p[-1, t:] == 0).all()
+    assert offs_p[-1, t:].min() >= ragged_batch.offsets[-t:].max()
+    from repro.core.random_factor import stream_stats_batch_np
+
+    rf_pad, _, dist_pad = stream_stats_batch_np(offs_p[-1:], szs_p[-1:])
+    tail_o = ragged_batch.offsets[len(ragged_batch.offsets) - t:]
+    tail_s = ragged_batch.sizes[len(ragged_batch.sizes) - t:]
+    rf_true, _, dist_true = stream_stats_batch_np(tail_o[None, :], tail_s[None, :])
+    assert rf_pad[0] == rf_true[0]
+    assert dist_pad[0] == dist_true[0]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_huge_offsets_stay_exact(backend):
+    """Offsets beyond int32: jnp's x64 lanes handle them natively; pallas
+    must detect the overflow and fall back to the exact host path rather
+    than truncate into wrong seek counts."""
+
+    offs = np.array([2**33, 2**33 + 4096, 2**34, 5, 2**31], dtype=np.int64)
+    batch = TraceBatch(
+        offsets=offs,
+        sizes=np.full(offs.size, 4096, dtype=np.int64),
+        file_ids=np.zeros(offs.size, dtype=np.int64),
+        app_ids=np.zeros(offs.size, dtype=np.int64),
+        times=np.zeros(offs.size, dtype=np.float64),
+        gap_positions=np.zeros(0, dtype=np.int64),
+        gap_seconds=np.zeros(0, dtype=np.float64),
+    )
+    oracle = compute_stream_scores(batch, STREAM_LEN, backend="numpy")
+    scores = compute_stream_scores(batch, STREAM_LEN, backend=backend)
+    np.testing.assert_array_equal(scores.rf_sum, oracle.rf_sum)
+    np.testing.assert_array_equal(scores.percentage, oracle.percentage)
+    np.testing.assert_array_equal(scores.seek_distance, oracle.seek_distance)
+
+
 def test_routing_decisions_identical_across_backends(batch):
     """End-to-end: percentages from the device backends must induce the
     same redirector decisions as the oracle (fp noise must stay far from
@@ -95,10 +153,11 @@ def test_routing_decisions_identical_across_backends(batch):
     from repro.core import IONodeSimulator
 
     results = {}
-    for backend in ("numpy", "jnp"):
+    for backend in ("numpy", "jnp", "pallas"):
         scores = compute_stream_scores(batch, STREAM_LEN, backend=backend)
         sim = IONodeSimulator(scheme="ssdup+",
                               ssd_capacity=batch.total_bytes // 2)
         r = sim.run(batch, scores=scores)
         results[backend] = (r.bytes_to_ssd, r.bytes_to_hdd_direct, r.flushes)
     assert results["jnp"] == results["numpy"]
+    assert results["pallas"] == results["numpy"]

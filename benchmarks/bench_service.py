@@ -1,0 +1,99 @@
+"""Service benchmark: online arrival-to-completion throughput, healthy
+vs one-crash, across the four schemes.
+
+The offline fleet benchmarks measure replay throughput; this one measures
+the *service* view — a Poisson-stamped mixed load dispatched through the
+discrete-event loop (`repro.service.BurstBufferService`) — and reports
+per-scheme tail latency plus the cost of a mid-run node crash (failover,
+reshard, backlog replay on the takeover node).
+
+Rows:
+
+* ``service_<scheme>_healthy``  — no faults; derived p99 latency (s) and
+  completed MB/s over the makespan.
+* ``service_<scheme>_crash``    — one scripted crash at 25% of the
+  arrival horizon on an 8-node fleet; derived recovery seconds.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row
+from repro.core import TraceBatch, ior, mixed, relabel
+from repro.core.workloads import GiB, MiB
+from repro.service import BurstBufferService, FaultInjector, poisson_arrivals
+
+NUM_NODES = 8
+RATE_RPS = 2000.0
+SCHEMES = ("orangefs", "orangefs-bb", "ssdup", "ssdup+")
+
+
+def _offered(total_bytes: int) -> TraceBatch:
+    per_app = max(total_bytes // 4, 64 * MiB)
+    apps = [
+        relabel(ior("segmented-contiguous", 8, total_bytes=per_app, seed=1),
+                app_id=0, file_id=0),
+        relabel(ior("segmented-random", 8, total_bytes=per_app, seed=2),
+                app_id=1, file_id=1),
+        relabel(ior("strided", 32, total_bytes=per_app, seed=3),
+                app_id=2, file_id=2),
+        relabel(ior("segmented-random", 16, total_bytes=per_app, seed=4),
+                app_id=3, file_id=3),
+    ]
+    load = mixed(*apps, burst_requests=512)
+    return poisson_arrivals(
+        TraceBatch.from_items(load.trace), rate_rps=RATE_RPS, seed=7
+    )
+
+
+def run(total_bytes: int = 2 * GiB) -> list[Row]:
+    rows: list[Row] = []
+    batch = _offered(total_bytes)
+    horizon = float(batch.times[-1])
+    ssd = max(batch.total_bytes // 2 // NUM_NODES, 64 * MiB)
+    crash_at = 0.25 * horizon
+
+    print("\n== service: online arrivals, healthy vs one-crash ==")
+    print(f"-- {batch.total_bytes / GiB:.1f} GiB offered at "
+          f"{RATE_RPS:.0f} req/s over {NUM_NODES} nodes --")
+    print(f"{'scheme':>12s} {'healthy MB/s':>13s} {'p99 (s)':>9s} "
+          f"{'crash MB/s':>11s} {'recovery (s)':>13s}")
+    for scheme in SCHEMES:
+        t0 = time.perf_counter()
+        healthy = BurstBufferService(
+            scheme=scheme, num_nodes=NUM_NODES, policy="range-offset",
+            ssd_capacity=ssd,
+        ).run(batch)
+        dt_h = time.perf_counter() - t0
+        hm = healthy.metrics
+        assert not hm.conservation_violations()
+        rows.append(Row(
+            f"service_{scheme}_healthy", dt_h * 1e6,
+            f"mbs={hm.throughput_mbs:.1f};p99_s={hm.p99_latency:.3f}",
+        ))
+
+        t0 = time.perf_counter()
+        crashed = BurstBufferService(
+            scheme=scheme, num_nodes=NUM_NODES, policy="range-offset",
+            ssd_capacity=ssd, heartbeat_timeout=2.0, epoch_seconds=0.5,
+            injector=FaultInjector.crash_at(crash_at, NUM_NODES // 2),
+        ).run(batch)
+        dt_c = time.perf_counter() - t0
+        cm = crashed.metrics
+        assert not cm.conservation_violations()
+        rec = cm.recovery_seconds or 0.0
+        rows.append(Row(
+            f"service_{scheme}_crash", dt_c * 1e6,
+            f"mbs={cm.throughput_mbs:.1f};recovery_s={rec:.2f}",
+        ))
+        print(f"{scheme:>12s} {hm.throughput_mbs:13.1f} "
+              f"{hm.p99_latency:9.3f} {cm.throughput_mbs:11.1f} "
+              f"{rec:13.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import BENCH_BYTES, emit
+
+    emit(run(BENCH_BYTES))

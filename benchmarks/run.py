@@ -41,6 +41,7 @@ from benchmarks import (  # noqa: E402
     bench_pipeline,
     bench_queue,
     bench_replay,
+    bench_service,
     bench_shardmap_decode,
     bench_tileio,
 )
@@ -61,6 +62,7 @@ SUITES = {
     "fleet": lambda tb: bench_fleet.run(tb),
     "replay": lambda tb: bench_replay.run(tb),
     "device_replay": lambda tb: bench_device_replay.run(tb),
+    "service": lambda tb: bench_service.run(tb),
 }
 
 CSV_PATH = os.path.join("experiments", "bench_results.csv")

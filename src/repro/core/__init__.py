@@ -44,7 +44,15 @@ from .redirector import DataRedirector, Device, RoutedStream
 from .simulator import Gap, IONodeSimulator, SimResult, run_schemes
 from .trace import StreamScores, TraceBatch, compute_stream_scores
 from .fleet import FleetProgram, FleetResult, FleetSimulator, run_fleet_schemes
-from .workloads import Workload, hpio, ior, mixed, mpi_tile_io, relabel
+from .workloads import (
+    Workload,
+    checkpoint_wave,
+    hpio,
+    ior,
+    mixed,
+    mpi_tile_io,
+    relabel,
+)
 
 __all__ = [
     "AdaptiveThreshold",
@@ -86,6 +94,7 @@ __all__ = [
     "FleetSimulator",
     "run_fleet_schemes",
     "Workload",
+    "checkpoint_wave",
     "ior",
     "hpio",
     "mpi_tile_io",

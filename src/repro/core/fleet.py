@@ -176,14 +176,24 @@ class FleetSimulator:
         self.node_kwargs = node_kwargs
 
     # ------------------------------------------------------------------
-    def shard(self, batch: TraceBatch) -> list[TraceBatch]:
-        """Partition a batch into per-node sub-batches under the policy."""
+    def assignment(self, batch: TraceBatch) -> np.ndarray:
+        """Per-request node assignment under the policy.
 
-        assignment = assign_nodes(
+        Exposed separately from :meth:`shard` so the online service layer
+        (:mod:`repro.service`) can release arriving requests to exactly
+        the lanes the offline simulator would use — the precondition for
+        a no-fault service run being bit-identical to :meth:`run`.
+        """
+
+        return assign_nodes(
             self.policy, batch.offsets, batch.file_ids, batch.app_ids,
             self.num_nodes,
         )
-        return batch.shard(assignment, self.num_nodes)
+
+    def shard(self, batch: TraceBatch) -> list[TraceBatch]:
+        """Partition a batch into per-node sub-batches under the policy."""
+
+        return batch.shard(self.assignment(batch), self.num_nodes)
 
     def run(self, trace: TraceBatch | Sequence[TraceItem]) -> FleetResult:
         batch = (

@@ -73,6 +73,7 @@ from .random_factor import (
     seek_distance_np,
     sorted_seek_distance,
     stream_percentage,
+    stream_stats_batch_np,
 )
 from .redirector import DataRedirector, Device
 from .trace import (
@@ -186,6 +187,7 @@ class IONodeSimulator:
         )
 
         self._last_pct = 0.0
+        self._session: _ReplayState | None = None
         if scheme == "ssdup+":
             policy = AdaptiveThreshold(window=adaptive_window)
             self.pipeline = TwoRegionPipeline(
@@ -282,12 +284,14 @@ class IONodeSimulator:
         st.clock += seconds
         st.gap_seconds += seconds
 
-    def _finalize(self, st: _ReplayState) -> SimResult:
+    def _finalize(self, st: _ReplayState, drain: bool = True) -> SimResult:
         io_seconds = st.clock - st.gap_seconds  # application-visible I/O time
 
         # -- drain: flush whatever is still buffered (overlaps the NEXT
-        #    compute phase in a real deployment; excluded from io_seconds)
-        if self.pipeline is not None:
+        #    compute phase in a real deployment; excluded from io_seconds).
+        #    ``drain=False`` models a crashed node: buffered bytes stay in
+        #    the pipeline for the caller to salvage (or count as stranded).
+        if drain and self.pipeline is not None:
             self.pipeline.drain()
             while self.pipeline.flush_job is not None:
                 job = self.pipeline.flush_job
@@ -311,6 +315,102 @@ class IONodeSimulator:
             metadata_bytes=self.pipeline.metadata_bytes if self.pipeline else 0,
             per_app_bytes=st.per_app,
         )
+
+    # -- online session API (consumed by repro.service) -----------------
+    #
+    # The offline engines replay a COMPLETE trace; the service layer
+    # instead streams scored windows into the simulator as clients
+    # arrive.  A session is the exact same state machine as
+    # ``_run_batched`` — same _ReplayState, same _replay_stream, same
+    # scoring math — just driven one window at a time, so a no-fault
+    # session replaying the same windows in the same order produces a
+    # bit-identical SimResult (asserted in tests/test_service.py).
+
+    def begin_session(self) -> None:
+        """Start an incremental replay (requires ``engine="batched"``)."""
+
+        if self.engine != "batched":
+            raise ValueError(
+                f"sessions require engine='batched', got {self.engine!r}"
+            )
+        if self._session is not None:
+            raise RuntimeError("session already open; call end_session first")
+        self._session = _ReplayState()
+
+    @property
+    def session(self) -> _ReplayState:
+        if self._session is None:
+            raise RuntimeError("no open session; call begin_session first")
+        return self._session
+
+    def feed_window(
+        self,
+        offsets: np.ndarray,
+        sizes: np.ndarray,
+        file_ids: np.ndarray,
+        app_ids: np.ndarray,
+        *,
+        force_hdd: bool = False,
+    ) -> float:
+        """Score and replay one request window; returns the service time
+        (clock delta) it consumed.
+
+        The window is scored with the same numpy oracle call the offline
+        engine uses (full windows and the <``stream_len`` trailing
+        partial alike), so session replay stays bit-exact.  ``force_hdd``
+        is admission control's redirect-to-HDD: the detector still sees
+        the stream, but its bytes bypass the burst buffer.
+        """
+
+        st = self.session
+        if len(sizes) == 0:
+            return 0.0
+        if len(sizes) > self.stream_len:
+            raise ValueError(
+                f"window of {len(sizes)} requests exceeds "
+                f"stream_len={self.stream_len}"
+            )
+        offsets = np.asarray(offsets, dtype=np.int64)
+        sizes = np.asarray(sizes, dtype=np.int64)
+        file_ids = np.asarray(file_ids, dtype=np.int64)
+        rf, pct, dist = stream_stats_batch_np(offsets[None, :], sizes[None, :])
+        nbytes = int(sizes.sum())
+        apps, inverse = np.unique(np.asarray(app_ids), return_inverse=True)
+        sums = np.zeros(len(apps), dtype=np.int64)
+        np.add.at(sums, inverse, sizes)
+        for a_id, a_sum in zip(apps, sums):
+            st.per_app[int(a_id)] = st.per_app.get(int(a_id), 0) + int(a_sum)
+        t0 = st.clock
+        self._replay_stream(
+            st, offsets, sizes, file_ids,
+            nbytes=nbytes,
+            pct=float(pct[0]),
+            seeks=int(rf[0]),
+            dist=int(dist[0]),
+            force_hdd=force_hdd,
+        )
+        return st.clock - t0
+
+    def feed_gap(self, seconds: float) -> float:
+        """Replay a compute gap (flusher-only time); returns the delta."""
+
+        st = self.session
+        t0 = st.clock
+        self._gap(st, float(seconds))
+        return st.clock - t0
+
+    def end_session(self, drain: bool = True) -> SimResult:
+        """Close the session and return its :class:`SimResult`.
+
+        ``drain=False`` models a crashed node: the final background
+        flush never happens, so buffered-but-unflushed bytes stay in
+        ``self.pipeline`` for the failover path to enumerate (replay on
+        a takeover node, or account as stranded data loss).
+        """
+
+        st = self.session
+        self._session = None
+        return self._finalize(st, drain=drain)
 
     # ------------------------------------------------------------------
     def run(
@@ -569,13 +669,35 @@ class IONodeSimulator:
         a: int,
         b: int,
     ) -> None:
-        sizes = batch.sizes[a:b]
-        offsets = batch.offsets[a:b]
-        file_ids = batch.file_ids[a:b]
-        nbytes = int(scores.nbytes[s])
-        pct = float(scores.percentage[s])
-        seeks = int(scores.rf_sum[s])
-        dist = int(scores.seek_distance[s])
+        self._replay_stream(
+            st,
+            batch.offsets[a:b],
+            batch.sizes[a:b],
+            batch.file_ids[a:b],
+            nbytes=int(scores.nbytes[s]),
+            pct=float(scores.percentage[s]),
+            seeks=int(scores.rf_sum[s]),
+            dist=int(scores.seek_distance[s]),
+        )
+
+    def _replay_stream(
+        self,
+        st: _ReplayState,
+        offsets: np.ndarray,
+        sizes: np.ndarray,
+        file_ids: np.ndarray,
+        *,
+        nbytes: int,
+        pct: float,
+        seeks: int,
+        dist: int,
+        force_hdd: bool = False,
+    ) -> None:
+        """Replay one scored stream against ``st`` (shared by the offline
+        batched engine and the online session API).  ``force_hdd`` is the
+        service layer's admission-control override: the detector still
+        observes the stream (identical policy evolution), but its bytes
+        are written HDD-direct regardless of the routing decision."""
 
         if self.scheme == "orangefs":
             self._advance_fg(
@@ -592,6 +714,8 @@ class IONodeSimulator:
             assert self.redirector is not None
             device = self.redirector.route_scored(nbytes, pct)
         self._last_pct = pct
+        if force_hdd:
+            device = Device.HDD
 
         if device is not Device.SSD:
             self._advance_fg(

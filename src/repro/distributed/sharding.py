@@ -254,6 +254,38 @@ TRACE_POLICIES = {
 }
 
 
+def reshard_to_survivors(policy: str, offsets, file_ids, app_ids,
+                         assignment, survivors) -> np.ndarray:
+    """Reassign requests stranded on dead nodes onto the survivors.
+
+    Requests whose current ``assignment`` already names a surviving node
+    stay put (that node holds their buffered state and detector
+    history); every other request is re-policied over the survivor set:
+    the named policy runs with ``num_nodes = len(survivors)`` and its
+    output indexes the sorted survivor list.  Pure and deterministic —
+    repeated failover of the same dead set yields the same assignment.
+    """
+
+    assignment = np.asarray(assignment, dtype=np.int64)
+    surv = np.asarray(sorted(set(int(s) for s in survivors)), dtype=np.int64)
+    if surv.size == 0:
+        raise ValueError("no surviving nodes to reshard onto")
+    out = assignment.copy()
+    dead_mask = ~np.isin(assignment, surv)
+    if not dead_mask.any():
+        return out
+    idx = np.nonzero(dead_mask)[0]
+    sub = assign_nodes(
+        policy,
+        np.asarray(offsets)[idx],
+        np.asarray(file_ids)[idx],
+        np.asarray(app_ids)[idx],
+        int(surv.size),
+    )
+    out[idx] = surv[sub]
+    return out
+
+
 def assign_nodes(policy: str, offsets, file_ids, app_ids,
                  num_nodes: int) -> np.ndarray:
     """Per-request node assignment under a named trace-sharding policy."""

@@ -1,0 +1,36 @@
+"""Online burst-buffer service: arrivals, fault injection, failover.
+
+The production-scenario layer over the offline fleet engines
+(ROADMAP "online multi-tenant service" item):
+
+* :mod:`repro.service.arrivals` — open-loop offered loads
+  (Poisson re-stamping, Zipf client mixes, checkpoint-burst waves).
+* :mod:`repro.service.injector` — seeded, scripted fault scenarios
+  (crash / slow / ssd_degrade / stall).
+* :mod:`repro.service.loop` — the discrete-event service: epoch
+  dispatch to per-node simulator sessions, heartbeat-driven failure
+  detection (:mod:`repro.distributed.fault_tolerance`), executed
+  recovery (reshard, backlog replay, rebalancing, admission control).
+* :mod:`repro.service.metrics` — tail latency, degraded-mode
+  throughput, recovery time, and the byte-conservation ledger.
+"""
+
+from .arrivals import checkpoint_arrivals, poisson_arrivals, zipf_mix
+from .injector import FAULT_KINDS, FaultEvent, FaultInjector, scripted
+from .loop import BurstBufferService, ServiceResult, run_service_schemes
+from .metrics import FaultRecord, ServiceMetrics
+
+__all__ = [
+    "checkpoint_arrivals",
+    "poisson_arrivals",
+    "zipf_mix",
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultInjector",
+    "scripted",
+    "BurstBufferService",
+    "ServiceResult",
+    "run_service_schemes",
+    "FaultRecord",
+    "ServiceMetrics",
+]

@@ -1,0 +1,155 @@
+"""Fault-tolerance runtime: bounded step windows, revival, idempotent
+elastic replanning (the ISSUE-8 satellite fixes)."""
+
+import collections
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the deterministic stand-in
+    from _hypothesis_fallback import given, settings, st
+
+from repro.distributed.fault_tolerance import (
+    ElasticPlan,
+    FaultToleranceController,
+    HeartbeatTable,
+    HostState,
+    Topology,
+)
+
+
+class TestHostState:
+    def test_step_window_is_bounded_deque(self):
+        h = HostState(0, 0.0, window=8)
+        for i in range(100):
+            h.record_step(float(i))
+        assert isinstance(h.step_durations, collections.deque)
+        assert h.step_durations.maxlen == 8
+        assert list(h.step_durations) == [float(i) for i in range(92, 100)]
+
+    def test_list_init_coerced_to_deque(self):
+        h = HostState(0, 0.0, window=4, step_durations=[1.0, 2.0, 3.0])
+        h.record_step(4.0)
+        h.record_step(5.0)
+        assert list(h.step_durations) == [2.0, 3.0, 4.0, 5.0]
+
+
+class TestRevival:
+    def test_late_heartbeat_revives_without_reregister(self):
+        now = [0.0]
+        t = HeartbeatTable(timeout=5.0, clock=lambda: now[0])
+        t.register(0)
+        t.register(1)
+        now[0] = 10.0
+        t.heartbeat(1)
+        assert t.dead_hosts() == [0]
+        assert not t.hosts[0].alive
+        # the host comes back: a plain heartbeat is enough
+        t.heartbeat(0)
+        assert t.dead_hosts() == []
+        assert t.hosts[0].alive
+
+    def test_revived_host_keeps_step_history(self):
+        now = [0.0]
+        t = HeartbeatTable(timeout=1.0, clock=lambda: now[0])
+        t.register(0)
+        for _ in range(5):
+            t.heartbeat(0, 0.25)
+        now[0] = 10.0
+        assert t.dead_hosts() == [0]
+        t.heartbeat(0)
+        assert len(t.hosts[0].step_durations) == 5  # not reset by revival
+
+
+class TestElasticPlanIdempotent:
+    def test_same_dead_set_twice_same_topology(self):
+        plan = ElasticPlan(Topology(pods=2, data=4, model=2))
+        t1 = plan.replan([3])
+        t2 = plan.replan([3])
+        assert t1 == t2
+        assert t1.global_batch_shards() == 7
+
+    def test_dead_set_grows_then_shrinks(self):
+        plan = ElasticPlan(Topology(pods=1, data=8, model=1))
+        assert plan.replan([0, 1]).data == 6
+        assert plan.replan([0]).data == 7  # host 1 revived
+        assert plan.replan([]).data == 8
+
+    def test_controller_double_tick_single_shrink(self):
+        now = [0.0]
+        table = HeartbeatTable(timeout=5.0, clock=lambda: now[0])
+        topo = Topology(pods=1, data=8, model=1)
+        for h in range(topo.n_hosts):
+            table.register(h)
+        ctl = FaultToleranceController(table, topo)
+        now[0] = 10.0
+        for h in range(1, 8):
+            table.heartbeat(h)
+        a1 = ctl.tick()
+        assert [a.kind for a in a1] == ["restart_from_checkpoint"]
+        assert ctl.topo.n_hosts == 7
+        # second tick with the SAME dead set: no action, no double shrink
+        a2 = ctl.tick()
+        assert a2 == []
+        assert ctl.topo.n_hosts == 7
+
+    def test_controller_rejoin_on_revival(self):
+        now = [0.0]
+        table = HeartbeatTable(timeout=5.0, clock=lambda: now[0])
+        topo = Topology(pods=1, data=4, model=1)
+        for h in range(4):
+            table.register(h)
+        ctl = FaultToleranceController(table, topo)
+        now[0] = 10.0
+        for h in (0, 1, 2):
+            table.heartbeat(h)
+        ctl.tick()
+        assert ctl.topo.n_hosts == 3
+        table.heartbeat(3)  # late heartbeat: host 3 is back
+        actions = ctl.tick()
+        assert [a.kind for a in actions] == ["rejoin"]
+        assert actions[0].detail["hosts"] == [3]
+        assert ctl.topo.n_hosts == 4
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    pods=st.integers(1, 4),
+    data=st.integers(1, 6),
+    model=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_replan_idempotent_property(pods, data, model, seed):
+    """Over random (topology, dead-set) pairs: replan is a pure,
+    idempotent function of the complete dead set, anchored at the
+    original topology."""
+
+    import numpy as np
+
+    topo = Topology(pods=pods, data=data, model=model)
+    plan = ElasticPlan(topo)
+    rng = np.random.default_rng(seed)
+    n = topo.n_hosts
+    k = int(rng.integers(0, n))  # leave at least one replica's worth alive
+    dead = sorted(int(h) for h in rng.choice(n, size=k, replace=False))
+    # keep at least one replica fully alive or expect the failure mode
+    dead_replicas = plan.dead_replicas(dead)
+    total_replicas = pods * data
+    if len(dead_replicas) >= total_replicas:
+        with pytest.raises(RuntimeError):
+            plan.replan(dead)
+        return
+    t1 = plan.replan(dead)
+    # 1. idempotent: same dead set, same topology
+    assert plan.replan(dead) == t1
+    # 2. anchored: an interleaved different dead set does not rebase it
+    other = dead[: len(dead) // 2]
+    plan.replan(other)
+    assert plan.replan(dead) == t1
+    # 3. replica accounting: surviving replicas preserved exactly
+    assert t1.pods * t1.data == total_replicas - len(dead_replicas)
+    # 4. model axis never shrinks (TP groups must stay complete)
+    assert t1.model == model
+    # 5. empty dead set is the original topology
+    assert plan.replan([]) == topo

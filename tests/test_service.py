@@ -1,0 +1,518 @@
+"""Online burst-buffer service: no-fault bit-exactness, fault scenarios,
+recovery accounting, admission control, and the arrival generators."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import FleetSimulator, IONodeSimulator, ior, mixed, relabel
+from repro.core.trace import Gap, TraceBatch
+from repro.core.workloads import MiB, checkpoint_wave
+from repro.service import (
+    BurstBufferService,
+    FaultEvent,
+    FaultInjector,
+    checkpoint_arrivals,
+    poisson_arrivals,
+    run_service_schemes,
+    scripted,
+    zipf_mix,
+)
+
+SCHEMES = ["orangefs", "orangefs-bb", "ssdup", "ssdup+"]
+SMALL = 128 * MiB
+
+
+def _apps(total=SMALL):
+    return [
+        relabel(ior("segmented-contiguous", 8, total_bytes=total, seed=1),
+                app_id=0, file_id=0),
+        relabel(ior("segmented-random", 8, total_bytes=total, seed=2),
+                app_id=1, file_id=1),
+        relabel(ior("strided", 16, total_bytes=total, seed=3),
+                app_id=2, file_id=2),
+    ]
+
+
+@pytest.fixture(scope="module")
+def offered():
+    """Poisson-stamped mixed load with compute gaps in the middle."""
+
+    items = list(mixed(*_apps(), burst_requests=256).trace)
+    items.insert(400, Gap(3.0))
+    items.insert(900, Gap(2.0))
+    batch = TraceBatch.from_items(items)
+    return poisson_arrivals(batch, rate_rps=2000.0, seed=11)
+
+
+@pytest.fixture(scope="module")
+def sustained():
+    """Slower arrivals + all-random (SSD-bound) traffic on every lane:
+    enough step samples for the straggler rule to trigger while work is
+    still queued, and a service time that actually depends on the SSD."""
+
+    apps = [
+        ior("segmented-random", 8, total_bytes=256 * MiB,
+            seed=i, app_id=i, file_id=i)
+        for i in range(8)
+    ]
+    batch = TraceBatch.from_items(
+        mixed(*apps, burst_requests=64, seed=9).trace
+    )
+    return poisson_arrivals(batch, rate_rps=300.0, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# no-fault equivalence with the offline fleet
+# ---------------------------------------------------------------------------
+
+
+class TestHealthyBitExact:
+    """Without faults or admission control the service is a re-timed
+    delivery schedule over the same per-node replays: node results must
+    equal ``FleetSimulator.run`` field for field."""
+
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    def test_node_results_bit_identical(self, offered, scheme):
+        kwargs = dict(num_nodes=4, policy="round-robin-app",
+                      ssd_capacity=64 * MiB)
+        svc = BurstBufferService(scheme=scheme, **kwargs).run(offered)
+        off = FleetSimulator(scheme=scheme, **kwargs).run(offered)
+        assert svc.node_results == off.node_results  # dataclass equality
+        assert svc.fleet.total_bytes == off.total_bytes
+
+    def test_healthy_ledger(self, offered):
+        svc = BurstBufferService(
+            scheme="ssdup+", num_nodes=4, ssd_capacity=64 * MiB
+        ).run(offered)
+        m = svc.metrics
+        assert m.conservation_violations() == []
+        assert m.completed_bytes == m.offered_bytes == offered.total_bytes
+        assert m.unserved_bytes == m.rejected_bytes == 0
+        assert m.stranded_bytes == m.replayed_bytes == 0
+        assert m.degraded_seconds == 0.0
+        assert m.healthy_seconds > 0.0
+        assert m.faults == []
+
+    def test_latency_percentiles_ordered(self, offered):
+        m = BurstBufferService(
+            scheme="ssdup+", num_nodes=4, ssd_capacity=64 * MiB
+        ).run(offered).metrics
+        assert len(m.latencies) == offered.num_requests
+        assert 0.0 <= m.p50_latency <= m.p99_latency <= m.p999_latency
+
+    def test_deterministic(self, offered):
+        kwargs = dict(scheme="ssdup", num_nodes=4, ssd_capacity=64 * MiB)
+        a = BurstBufferService(**kwargs).run(offered)
+        b = BurstBufferService(**kwargs).run(offered)
+        assert a.node_results == b.node_results
+        assert a.metrics.makespan_seconds == b.metrics.makespan_seconds
+        assert np.array_equal(a.metrics.latencies, b.metrics.latencies)
+
+
+# ---------------------------------------------------------------------------
+# crash + failover
+# ---------------------------------------------------------------------------
+
+
+class TestCrash:
+    def test_crash_on_16_node_fleet_all_schemes(self, offered):
+        """The ISSUE acceptance scenario: scripted crash on a 16-node
+        fleet completes under every scheme with a clean ledger and
+        reports tail latency + recovery time."""
+
+        results = run_service_schemes(
+            offered, num_nodes=16, policy="range-offset",
+            ssd_capacity=32 * MiB, epoch_seconds=0.5,
+            heartbeat_timeout=2.0,
+            injector=FaultInjector.crash_at(1.0, 3),
+        )
+        for scheme, r in results.items():
+            m = r.metrics
+            assert m.conservation_violations() == [], scheme
+            # survivors absorbed everything: nothing unserved or dropped
+            assert m.completed_bytes == m.offered_bytes
+            assert m.unserved_bytes == 0
+            assert m.p999_latency >= m.p99_latency >= 0.0
+            crash = [f for f in m.faults if f.kind == "crash"]
+            assert len(crash) == 1
+            f = crash[0]
+            assert f.node == 3
+            assert f.detected_at is not None
+            assert f.detection_seconds >= 0.0
+            assert f.recovery_seconds is not None
+            assert m.recovery_seconds == f.recovery_seconds
+            # the crashed lane stopped early: it served less than an
+            # equal shard, the survivors picked up the difference
+            assert len(r.node_results) == 16
+
+    def test_backlog_replayed_on_takeover(self, offered):
+        r = BurstBufferService(
+            scheme="orangefs-bb", num_nodes=2, policy="range-offset",
+            ssd_capacity=SMALL, epoch_seconds=0.5, heartbeat_timeout=2.0,
+            injector=FaultInjector.crash_at(0.3, 1), replay=True,
+        ).run(offered)
+        m = r.metrics
+        assert m.conservation_violations() == []
+        assert m.replayed_bytes > 0
+        assert m.stranded_bytes == 0
+        f = m.faults[0]
+        assert f.replayed_bytes == m.replayed_bytes
+        # replay takes wall time on the takeover lane: recovery ends
+        # strictly after detection
+        assert f.recovered_at > f.detected_at
+
+    def test_backlog_stranded_without_replay(self, offered):
+        r = BurstBufferService(
+            scheme="orangefs-bb", num_nodes=2, policy="range-offset",
+            ssd_capacity=SMALL, epoch_seconds=0.5, heartbeat_timeout=2.0,
+            injector=FaultInjector.crash_at(0.3, 1), replay=False,
+        ).run(offered)
+        m = r.metrics
+        assert m.conservation_violations() == []
+        assert m.stranded_bytes > 0
+        assert m.replayed_bytes == 0
+        assert m.faults[0].stranded_bytes == m.stranded_bytes
+
+    def test_crash_marks_epochs_degraded(self, offered):
+        m = BurstBufferService(
+            scheme="ssdup+", num_nodes=4, ssd_capacity=64 * MiB,
+            heartbeat_timeout=2.0, injector=FaultInjector.crash_at(1.0, 0),
+        ).run(offered).metrics
+        assert m.degraded_seconds > 0.0
+        assert m.conservation_violations() == []
+
+
+# ---------------------------------------------------------------------------
+# stragglers and degraded SSDs
+# ---------------------------------------------------------------------------
+
+
+class TestStragglerAndDegrade:
+    def test_slow_node_triggers_rebalance(self, sustained):
+        r = BurstBufferService(
+            scheme="ssdup+", num_nodes=8, ssd_capacity=64 * MiB,
+            straggler_factor=1.5,
+            injector=scripted((2.0, "slow", 2, 8.0)),
+        ).run(sustained)
+        m = r.metrics
+        assert m.conservation_violations() == []
+        assert m.completed_bytes == m.offered_bytes
+        assert m.rebalanced_bytes > 0
+        f = m.faults[0]
+        assert f.kind == "slow" and f.detected_at is not None
+        assert m.degraded_seconds > 0.0
+
+    def test_ssd_degrade_changes_service_math(self, sustained):
+        """A degraded SSD slows the node's *service* time, not just its
+        wall clock (single node: no survivors to offload to)."""
+
+        base = BurstBufferService(
+            scheme="ssdup+", num_nodes=1, ssd_capacity=64 * MiB,
+        ).run(sustained)
+        deg = BurstBufferService(
+            scheme="ssdup+", num_nodes=1, ssd_capacity=64 * MiB,
+            injector=scripted((0.5, "ssd_degrade", 0, 0.1)),
+        ).run(sustained)
+        assert deg.metrics.conservation_violations() == []
+        assert (deg.node_results[0].io_seconds
+                > base.node_results[0].io_seconds)
+        assert deg.metrics.degraded_seconds > 0.0
+
+    def test_degraded_node_detected_and_offloaded(self, sustained):
+        m = BurstBufferService(
+            scheme="ssdup+", num_nodes=8, ssd_capacity=64 * MiB,
+            straggler_factor=1.5,
+            injector=scripted((2.0, "ssd_degrade", 2, 0.05)),
+        ).run(sustained).metrics
+        assert m.conservation_violations() == []
+        assert m.rebalanced_bytes > 0
+        assert m.faults[0].detected_at is not None
+
+
+# ---------------------------------------------------------------------------
+# stalls: transient full stops
+# ---------------------------------------------------------------------------
+
+
+class TestStall:
+    def test_short_stall_invisible_to_controller(self, offered):
+        m = BurstBufferService(
+            scheme="ssdup+", num_nodes=4, ssd_capacity=64 * MiB,
+            heartbeat_timeout=5.0,
+            injector=scripted((1.0, "stall", 2, 1.0, 2.0)),
+        ).run(offered).metrics
+        assert m.conservation_violations() == []
+        f = m.faults[0]
+        assert f.kind == "stall"
+        assert f.detected_at is None  # never declared dead
+        assert m.stranded_bytes == m.replayed_bytes == 0
+        assert m.completed_bytes == m.offered_bytes
+
+    def test_long_stall_declared_dead_then_rejoins(self, sustained):
+        m = BurstBufferService(
+            scheme="ssdup+", num_nodes=4, ssd_capacity=64 * MiB,
+            epoch_seconds=0.5, heartbeat_timeout=2.0,
+            injector=scripted((0.5, "stall", 1, 1.0, 10.0)),
+        ).run(sustained).metrics
+        assert m.conservation_violations() == []
+        f = m.faults[0]
+        # stalled past the timeout: a (correct) false-positive death
+        assert f.detected_at is not None
+        assert f.detection_seconds >= 2.0
+        assert f.recovered_at is not None
+        assert m.completed_bytes == m.offered_bytes
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_redirect_serves_everything_via_hdd(self, offered):
+        m = BurstBufferService(
+            scheme="orangefs-bb", num_nodes=2, ssd_capacity=16 * MiB,
+            admission_occupancy=0.5, admission_action="redirect",
+        ).run(offered).metrics
+        assert m.conservation_violations() == []
+        assert m.redirected_bytes > 0
+        assert m.completed_bytes == m.offered_bytes
+        assert m.written_hdd_bytes >= m.redirected_bytes
+
+    def test_reject_drops_but_ledger_balances(self, offered):
+        m = BurstBufferService(
+            scheme="orangefs-bb", num_nodes=2, ssd_capacity=16 * MiB,
+            admission_occupancy=0.5, admission_action="reject",
+        ).run(offered).metrics
+        assert m.conservation_violations() == []
+        assert m.rejected_bytes > 0
+        assert m.completed_bytes + m.rejected_bytes == m.offered_bytes
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BurstBufferService(admission_occupancy=1.5)
+        with pytest.raises(ValueError):
+            BurstBufferService(admission_action="tarpit")
+        with pytest.raises(ValueError):
+            BurstBufferService(num_nodes=0)
+        with pytest.raises(ValueError):
+            BurstBufferService(policy="by-vibes")
+        with pytest.raises(ValueError):
+            BurstBufferService(epoch_seconds=0.0)
+
+
+# ---------------------------------------------------------------------------
+# randomized robustness sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_fault_sweep_conserves_bytes(offered, seed):
+    """Seeded random multi-fault scenarios: whatever the script does, the
+    byte ledgers must balance and the loop must terminate."""
+
+    inj = FaultInjector.random(
+        seed=seed, num_nodes=8, horizon_seconds=3.0,
+        crashes=1, slows=1, degrades=1, stalls=1, stall_seconds=4.0,
+    )
+    m = BurstBufferService(
+        scheme="ssdup+", num_nodes=8, policy="range-offset",
+        ssd_capacity=32 * MiB, epoch_seconds=0.5, heartbeat_timeout=2.0,
+        injector=inj,
+    ).run(offered).metrics
+    assert m.conservation_violations() == []
+    assert len(m.faults) == 4
+
+
+# ---------------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------------
+
+
+class TestInjector:
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            FaultEvent(at=1.0, kind="meteor", node=0)
+        with pytest.raises(ValueError):
+            FaultEvent(at=-1.0, kind="crash", node=0)
+        with pytest.raises(ValueError):
+            FaultEvent(at=1.0, kind="slow", node=0, factor=0.5)
+        with pytest.raises(ValueError):
+            FaultEvent(at=1.0, kind="ssd_degrade", node=0, factor=2.0)
+        with pytest.raises(ValueError):
+            FaultEvent(at=1.0, kind="stall", node=0, duration=0.0)
+
+    def test_scripted_sorts_by_time(self):
+        inj = scripted(
+            (5.0, "crash", 1), (1.0, "slow", 0, 3.0),
+            FaultEvent(at=3.0, kind="stall", node=2, duration=1.0),
+        )
+        assert [e.at for e in inj] == [1.0, 3.0, 5.0]
+        assert len(inj) == 3
+
+    def test_random_is_seeded_and_counted(self):
+        a = FaultInjector.random(7, num_nodes=8, horizon_seconds=10.0,
+                                 crashes=2, slows=2, stalls=1)
+        b = FaultInjector.random(7, num_nodes=8, horizon_seconds=10.0,
+                                 crashes=2, slows=2, stalls=1)
+        assert a.events == b.events
+        kinds = [e.kind for e in a]
+        assert kinds.count("crash") == 2 and kinds.count("stall") == 1
+        # within one kind, nodes are distinct
+        crash_nodes = [e.node for e in a if e.kind == "crash"]
+        assert len(set(crash_nodes)) == 2
+        with pytest.raises(ValueError):
+            FaultInjector.random(0, num_nodes=2, horizon_seconds=1.0,
+                                 crashes=3)
+
+
+# ---------------------------------------------------------------------------
+# arrival generators
+# ---------------------------------------------------------------------------
+
+
+class TestArrivals:
+    def test_poisson_preserves_everything_but_times(self):
+        wl = mixed(*_apps(), burst_requests=256)
+        base = TraceBatch.from_items(list(wl.trace))
+        stamped = poisson_arrivals(base, rate_rps=500.0, seed=3)
+        assert np.array_equal(stamped.offsets, base.offsets)
+        assert np.array_equal(stamped.sizes, base.sizes)
+        assert np.array_equal(stamped.gap_positions, base.gap_positions)
+        assert np.all(np.diff(stamped.times) > 0)  # strictly increasing
+        assert stamped.times[0] > 0.0
+        # mean inter-arrival ~ 1/rate
+        mean_gap = float(np.diff(stamped.times).mean())
+        assert mean_gap == pytest.approx(1 / 500.0, rel=0.2)
+        with pytest.raises(ValueError):
+            poisson_arrivals(base, rate_rps=0.0)
+
+    def test_zipf_mix_preserves_requests_and_order(self):
+        apps = _apps(total=8 * MiB)
+        batch = zipf_mix(apps, rate_rps=1000.0, s=1.2, seed=4)
+        n_expected = sum(
+            sum(1 for r in w.trace if hasattr(r, "offset")) for w in apps
+        )
+        assert batch.num_requests == n_expected
+        # per-app internal order preserved
+        for k, w in enumerate(apps):
+            mine = batch.offsets[batch.app_ids == k]
+            orig = [r.offset for r in w.trace if hasattr(r, "offset")]
+            assert np.array_equal(mine, np.array(orig))
+        # hot app (k=0) tends to finish arriving earlier than the tail app
+        last0 = np.max(np.nonzero(batch.app_ids == 0))
+        last2 = np.max(np.nonzero(batch.app_ids == 2))
+        assert last0 < last2
+        b2 = zipf_mix(apps, rate_rps=1000.0, s=1.2, seed=4)
+        assert np.array_equal(b2.offsets, batch.offsets)
+        with pytest.raises(ValueError):
+            zipf_mix([], rate_rps=100.0)
+
+    def test_checkpoint_arrivals_waves_and_gaps(self):
+        batch = checkpoint_arrivals(
+            8, waves=3, compute_seconds=20.0, seed=1,
+            bytes_per_wave=16 * MiB,
+        )
+        assert len(batch.gap_seconds) == 2  # waves - 1 compute phases
+        assert np.all(batch.gap_seconds == 20.0)
+        assert batch.total_bytes == 3 * 16 * MiB
+        assert np.all(np.diff(batch.times) >= 0)
+
+    def test_checkpoint_wave_rotates_files(self):
+        wl = checkpoint_wave(4, waves=4, bytes_per_wave=4 * MiB,
+                             rotate_files=2, file_id=10)
+        fids = {r.file_id for r in wl.trace if hasattr(r, "offset")}
+        assert fids == {10, 11}
+        with pytest.raises(ValueError):
+            checkpoint_wave(4, waves=0)
+
+
+# ---------------------------------------------------------------------------
+# incremental session API (the simulator-side tentpole hook)
+# ---------------------------------------------------------------------------
+
+
+class TestSessionAPI:
+    def test_requires_batched_engine(self):
+        sim = IONodeSimulator(scheme="ssdup+", engine="per-request")
+        with pytest.raises(ValueError):
+            sim.begin_session()
+
+    def test_double_begin_and_missing_session(self):
+        sim = IONodeSimulator(scheme="ssdup+", engine="batched")
+        sim.begin_session()
+        with pytest.raises(RuntimeError):
+            sim.begin_session()
+        sim.end_session()
+        with pytest.raises(RuntimeError):
+            sim.feed_gap(1.0)
+
+    def test_oversized_window_rejected(self):
+        sim = IONodeSimulator(scheme="ssdup+", engine="batched",
+                              stream_len=4)
+        sim.begin_session()
+        n = 5
+        with pytest.raises(ValueError):
+            sim.feed_window(
+                np.arange(n) * 4096, np.full(n, 4096),
+                np.zeros(n, dtype=np.int64), np.zeros(n, dtype=np.int64),
+            )
+
+    def test_fed_sessions_match_offline_run(self, offered):
+        """Feeding the offline engine's exact window/gap interleaving
+        reproduces run() bit for bit — the invariant the service's
+        no-fault equality is built on."""
+
+        for scheme in SCHEMES:
+            off = IONodeSimulator(
+                scheme=scheme, ssd_capacity=64 * MiB, engine="batched"
+            ).run(offered)
+            sim = IONodeSimulator(
+                scheme=scheme, ssd_capacity=64 * MiB, engine="batched"
+            )
+            svc = BurstBufferService(
+                scheme=scheme, num_nodes=1, ssd_capacity=64 * MiB
+            )
+            sim.begin_session()
+            for kind, payload in svc._build_queue(offered):
+                if kind == "gap":
+                    sim.feed_gap(payload)
+                else:
+                    sim.feed_window(payload.offsets, payload.sizes,
+                                    payload.file_ids, payload.app_ids)
+            assert sim.end_session() == off, scheme
+
+    def test_empty_window_is_noop(self):
+        sim = IONodeSimulator(scheme="ssdup+", engine="batched")
+        sim.begin_session()
+        z = np.zeros(0, dtype=np.int64)
+        assert sim.feed_window(z, z, z, z) == 0.0
+        res = sim.end_session()
+        assert res.total_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# result plumbing
+# ---------------------------------------------------------------------------
+
+
+class TestResultPlumbing:
+    def test_fleet_view_matches_node_results(self, offered):
+        r = BurstBufferService(
+            scheme="ssdup+", num_nodes=4, ssd_capacity=64 * MiB
+        ).run(offered)
+        fl = r.fleet
+        assert fl.num_nodes == 4
+        assert fl.total_bytes == sum(
+            n.total_bytes for n in r.node_results
+        )
+
+    def test_service_result_frozen(self, offered):
+        r = BurstBufferService(
+            scheme="orangefs", num_nodes=2
+        ).run(offered)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            r.scheme = "other"

@@ -1,0 +1,29 @@
+"""repro.analysis — static checker (simlint) + runtime sanitizer.
+
+Two halves of one contract:
+
+- **simlint** (:mod:`.engine`, :mod:`.rules`, :mod:`.cli`) statically
+  checks the source for simulator-invariant hazards — run it with
+  ``python -m repro.analysis --check src/repro``;
+- **sanitize mode** (:mod:`.sanitize`) arms runtime invariant checks in
+  the engines, service loop, and golden harness — enable with
+  ``REPRO_SANITIZE=1`` or the :func:`sanitizing` context manager.
+"""
+
+from .engine import Finding, ModuleContext, Rule, check_paths, check_source
+from .rules import all_rules, rules_by_id
+from .sanitize import SanitizerError, enabled, resolve, sanitizing
+
+__all__ = [
+    "Finding",
+    "ModuleContext",
+    "Rule",
+    "SanitizerError",
+    "all_rules",
+    "check_paths",
+    "check_source",
+    "enabled",
+    "resolve",
+    "rules_by_id",
+    "sanitizing",
+]

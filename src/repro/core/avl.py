@@ -51,7 +51,8 @@ def _balance(n: _Node) -> int:
 
 def _rot_right(y: _Node) -> _Node:
     x = y.left
-    assert x is not None
+    if x is None:
+        raise RuntimeError("right rotation on a node with no left child")
     y.left, x.right = x.right, y
     _update(y)
     _update(x)
@@ -60,7 +61,8 @@ def _rot_right(y: _Node) -> _Node:
 
 def _rot_left(x: _Node) -> _Node:
     y = x.right
-    assert y is not None
+    if y is None:
+        raise RuntimeError("left rotation on a node with no right child")
     x.right, y.left = y.left, x
     _update(x)
     _update(y)
@@ -71,12 +73,14 @@ def _rebalance(n: _Node) -> _Node:
     _update(n)
     b = _balance(n)
     if b > 1:
-        assert n.left is not None
+        if n.left is None:
+            raise RuntimeError("left-heavy node with no left child")
         if _balance(n.left) < 0:  # LR
             n.left = _rot_left(n.left)
         return _rot_right(n)
     if b < -1:
-        assert n.right is not None
+        if n.right is None:
+            raise RuntimeError("right-heavy node with no right child")
         if _balance(n.right) > 0:  # RL
             n.right = _rot_right(n.right)
         return _rot_left(n)
@@ -215,14 +219,20 @@ class AVLTree:
         def rec(n: _Node | None, lo: int | None, hi: int | None) -> int:
             if n is None:
                 return 0
-            assert lo is None or n.key > lo, "BST order violated (left)"
-            assert hi is None or n.key < hi, "BST order violated (right)"
+            if not (lo is None or n.key > lo):
+                raise AssertionError("BST order violated (left)")
+            if not (hi is None or n.key < hi):
+                raise AssertionError("BST order violated (right)")
             hl = rec(n.left, lo, n.key)
             hr = rec(n.right, n.key, hi)
-            assert abs(hl - hr) <= 1, f"AVL balance violated at key {n.key}"
-            assert n.height == 1 + max(hl, hr), "stale height"
+            if abs(hl - hr) > 1:
+                raise AssertionError(f"AVL balance violated at key {n.key}")
+            if n.height != 1 + max(hl, hr):
+                raise AssertionError("stale height")
             return n.height
 
         total = rec(self._root, None, None)
-        assert total == self.height
-        assert sum(1 for _ in self.in_order()) == self._count
+        if total != self.height:
+            raise AssertionError("root height disagrees with recursion")
+        if sum(1 for _ in self.in_order()) != self._count:
+            raise AssertionError("node count disagrees with in-order walk")

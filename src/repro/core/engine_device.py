@@ -106,10 +106,12 @@ try:  # the control plane must import even where jax is absent
     import jax
     import jax.numpy as jnp
     from jax import lax
-    from jax.experimental import enable_x64
+    from jax.experimental import checkify, enable_x64
 except Exception:  # pragma: no cover - jax is installed in this repo
     jax = None
     jnp = None
+
+from ..analysis import sanitize as _sanitize
 
 from .adaptive import (
     DEFAULT_THRESHOLD,
@@ -1062,6 +1064,42 @@ def _jitted_program():
     return jax.jit(_replay_program)
 
 
+def _check_outputs(out):
+    """checkify guards over the replay outputs (sanitize mode): any
+    NaN/Inf produced inside the scan propagates through the accumulated
+    clocks/ledgers to an output and trips a finite check; byte ledgers
+    must be non-negative and io time can never exceed total time.
+
+    A separate program from the replay itself: checkify cannot traverse
+    the region-fill ``while_loop`` under ``vmap`` (batched while), so the
+    replay runs unchecked and this checker discharges over its results.
+    """
+
+    for k in ("io_seconds", "total_seconds", "flush_paused_seconds",
+              "blocked_seconds"):
+        checkify.check(
+            jnp.all(jnp.isfinite(out[k])), f"non-finite {k} in device replay"
+        )
+        checkify.check(
+            jnp.all(out[k] >= 0), f"negative {k} in device replay"
+        )
+    for k in ("bytes_to_ssd", "bytes_to_hdd_direct", "flushes",
+              "peak_ssd_occupancy"):
+        checkify.check(
+            jnp.all(out[k] >= 0), f"negative {k} in device replay"
+        )
+    checkify.check(
+        jnp.all(out["total_seconds"] >= out["io_seconds"]),
+        "io_seconds exceeds total_seconds in device replay",
+    )
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_output_checker():
+    checked = checkify.checkify(_check_outputs, errors=checkify.user_checks)
+    return jax.jit(checked)
+
+
 def _globals(
     hdd: HDDModel, interference: InterferenceModel
 ) -> dict[str, np.float64]:
@@ -1082,13 +1120,24 @@ def replay_lanes(
     state0: Mapping[str, np.ndarray],
     hdd: HDDModel | None = None,
     interference: InterferenceModel | None = None,
+    sanitize: bool | None = None,
 ) -> dict[str, np.ndarray]:
     """Run every lane's replay in one jitted device call.
+
+    Accuracy contract: float64 on device, accurate to the
+    ``DEVICE_TOLERANCES`` tiers against the batched numpy oracle (scan
+    reassociates float accumulation, so bit-exactness is not promised).
 
     ``events`` is the stacked ``(S, L)`` tape (:func:`stack_events`),
     ``lanes``/``state0`` are stacked ``(L,)``/``(L, ...)`` structs.
     Returns per-lane result arrays (io/total seconds, byte splits, flush
     and pause counters, peak occupancy) as host numpy.
+
+    With ``sanitize`` on (``True``/``REPRO_SANITIZE=1``/the
+    :func:`repro.analysis.sanitize.sanitizing` override) the program runs
+    under :mod:`jax.experimental.checkify` — NaN/Inf reaching any
+    result, negative ledgers, or a backwards clock raise
+    :class:`~repro.analysis.sanitize.SanitizerError`.
     """
 
     _require_jax()
@@ -1097,6 +1146,14 @@ def replay_lanes(
         out = _jitted_program()(
             g, dict(lanes), dict(state0), dict(events)
         )
+        if _sanitize.resolve(sanitize):
+            err, _ = _jitted_output_checker()(out)
+            try:
+                err.throw()
+            except Exception as e:
+                raise _sanitize.SanitizerError(
+                    f"device replay invariant violated: {e}"
+                ) from e
         return {k: np.asarray(v) for k, v in out.items()}
 
 
@@ -1129,6 +1186,7 @@ def simulate_device(
     flush_gate: float = 0.5,
     adaptive_window: int = 64,
     threshold_warmup: Sequence[float] | None = None,
+    sanitize: bool | None = None,
 ):
     """Replay one shard on one lane; returns a
     :class:`~repro.core.simulator.SimResult` (see the module docstring
@@ -1146,7 +1204,7 @@ def simulate_device(
         [initial_lane_state(scheme, adaptive_window, threshold_warmup)]
     )
     out = replay_lanes(events, lanes, state0, hdd=hdd,
-                       interference=interference)
+                       interference=interference, sanitize=sanitize)
     b_ssd = int(out["bytes_to_ssd"][0])
     b_hdd = int(out["bytes_to_hdd_direct"][0])
     return SimResult(

@@ -31,6 +31,7 @@ import numpy as np
 from repro.distributed.sharding import TRACE_POLICIES, assign_nodes
 
 from .random_factor import DEFAULT_STREAM_LEN
+from ..analysis import sanitize as _sanitize
 from .simulator import IONodeSimulator, SimResult
 from .trace import (
     SCORE_BACKENDS,
@@ -196,10 +197,33 @@ class FleetSimulator:
         return batch.shard(self.assignment(batch), self.num_nodes)
 
     def run(self, trace: TraceBatch | Sequence[TraceItem]) -> FleetResult:
+        """Shard ``trace`` and replay every node with the per-node engine.
+
+        Accuracy contract: inherits the node engine's — bit-identical to
+        the per-request oracle for the numpy engines, ``DEVICE_TOLERANCES``
+        tiers for ``engine="device"``; aggregation is deterministic
+        (nodes reduced in index order).
+        """
+
         batch = (
             trace if isinstance(trace, TraceBatch) else TraceBatch.from_items(trace)
         )
         shards = self.shard(batch)
+        if _sanitize.resolve(self.node_kwargs.get("sanitize")):
+            # sharding must conserve the trace: every request lands on
+            # exactly one node
+            n_req = sum(s.num_requests for s in shards)
+            _sanitize.check(
+                n_req == batch.num_requests,
+                "sharding dropped/duplicated requests: %d across shards "
+                "vs %d offered", n_req, batch.num_requests,
+            )
+            n_bytes = sum(s.total_bytes for s in shards)
+            _sanitize.check(
+                n_bytes == batch.total_bytes,
+                "sharding dropped/duplicated bytes: %d across shards "
+                "vs %d offered", n_bytes, batch.total_bytes,
+            )
         node_kwargs = dict(self.node_kwargs)
         if self.threshold_scope == "fleet" and self.scheme in ("ssdup",
                                                                "ssdup+"):
@@ -316,7 +340,11 @@ class FleetProgram:
     def run(
         self, trace: TraceBatch | Sequence[TraceItem]
     ) -> dict[str, FleetResult]:
-        """Replay every ``scheme × node`` lane in one device call."""
+        """Replay every ``scheme × node`` lane in one device call.
+
+        Accuracy contract: each lane matches the device engine's
+        ``DEVICE_TOLERANCES`` tiers against the batched numpy oracle.
+        """
 
         ed = self._ed
         batch = (
@@ -401,7 +429,12 @@ def run_fleet_schemes(
     policy: str = "round-robin-app",
     **kwargs,
 ) -> dict[str, FleetResult]:
-    """Fleet counterpart of :func:`repro.core.simulator.run_schemes`."""
+    """Fleet counterpart of :func:`repro.core.simulator.run_schemes`.
+
+    Accuracy contract: same as :meth:`FleetSimulator.run` — bit-identical
+    to the per-request oracle on numpy engines, ``DEVICE_TOLERANCES``
+    tiers on the device engine.
+    """
 
     batch = trace if isinstance(trace, TraceBatch) else TraceBatch.from_items(trace)
     return {

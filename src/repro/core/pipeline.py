@@ -152,9 +152,17 @@ class TwoRegionPipeline:
     def _schedule_flush(self, region: LogRegion) -> None:
         # bytes/seeks are fixed at schedule time: a scheduled region never
         # receives further appends (it is no longer the active region)
+        nbytes = region.flush_bytes()
+        if nbytes <= 0:
+            # Nothing live to flush (e.g. an oversized request rejected by
+            # an EMPTY single-region buffer).  A zero-byte job would wedge
+            # the drain loop: flush_progress() ignores nbytes <= 0, so the
+            # job could never complete.  Clear the region and skip the job.
+            region.reset()
+            return
         job = FlushJob(
             region=region,
-            bytes_total=region.flush_bytes(),
+            bytes_total=nbytes,
             seeks=region.seek_count_sorted(),
         )
         if self.flush_job is None:
@@ -207,7 +215,8 @@ class TwoRegionPipeline:
         self.total_paused_seconds += seconds
 
     def _complete_flush(self) -> None:
-        assert self.flush_job is not None
+        if self.flush_job is None:
+            raise RuntimeError("completing a flush with no active job")
         self.flush_job.region.reset()
         self.flush_job = None
         self.flushes_completed += 1
@@ -280,9 +289,11 @@ class SingleRegionBuffer(TwoRegionPipeline):
                 # flushing phase") — eagerly, so a following compute gap can
                 # drain it.
                 self._schedule_flush(region)
-                self.flush_job.forced = True
+                if self.flush_job is not None:
+                    self.flush_job.forced = True
             return AppendOutcome(ok=True)
         self._schedule_flush(region)
-        self.flush_job.forced = True  # plain BB flushes immediately
+        if self.flush_job is not None:
+            self.flush_job.forced = True  # plain BB flushes immediately
         self.blocked_events += 1
         return AppendOutcome(ok=False, blocked=True)

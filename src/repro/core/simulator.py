@@ -58,10 +58,12 @@ final flush in the next compute phase).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Iterable, Sequence
 
 import numpy as np
 
+from ..analysis import sanitize as _sanitize
 from .adaptive import AdaptiveThreshold, StaticWatermarkThreshold
 from .device_model import HDDModel, IngestLink, InterferenceModel, SSDModel
 from .pipeline import SingleRegionBuffer, TwoRegionPipeline
@@ -160,6 +162,7 @@ class IONodeSimulator:
         index_backend: str = "numpy",
         engine: str = "batched",
         threshold_warmup: Sequence[float] | None = None,
+        sanitize: bool | None = None,
     ):
         if scheme not in ("orangefs", "orangefs-bb", "ssdup", "ssdup+"):
             raise ValueError(f"unknown scheme {scheme}")
@@ -172,6 +175,9 @@ class IONodeSimulator:
             )
         self.scheme = scheme
         self.engine = engine
+        # runtime invariant checks: True/False pins the instance, None
+        # defers to REPRO_SANITIZE / the sanitizing() override
+        self.sanitize = _sanitize.resolve(sanitize)
         self.hdd = hdd or HDDModel()
         self.ssd = ssd or SSDModel()
         self.link = link or IngestLink()
@@ -257,7 +263,8 @@ class IONodeSimulator:
     def _drain_current_flush(self, st: _ReplayState) -> float:
         """Block the writer until the active flush finishes (Eq. 6 rate)."""
 
-        assert self.pipeline is not None and self.pipeline.flush_job is not None
+        if self.pipeline is None or self.pipeline.flush_job is None:
+            raise RuntimeError("no active flush job to drain")
         self.pipeline.force_flush()
         job = self.pipeline.flush_job
         dt = job.bytes_left / job.effective_rate(self.hdd)
@@ -269,6 +276,12 @@ class IONodeSimulator:
         """Compute phase: the flusher gets the HDD to itself and keeps
         draining through the backlog until the gap budget runs out."""
 
+        if self.sanitize:
+            _sanitize.check(
+                seconds >= 0.0 and np.isfinite(seconds),
+                "compute gap must be a finite non-negative duration, got %r",
+                seconds,
+            )
         if self.pipeline is not None:
             budget = seconds
             while budget > 0 and self.pipeline.flush_job is not None:
@@ -299,6 +312,8 @@ class IONodeSimulator:
                 self.pipeline.flush_progress(job.bytes_left)
 
         total_bytes = st.bytes_ssd + st.bytes_hdd
+        if self.sanitize:
+            self._sanitize_final(st, io_seconds, drain)
         return SimResult(
             scheme=self.scheme,
             io_seconds=io_seconds,
@@ -315,6 +330,50 @@ class IONodeSimulator:
             metadata_bytes=self.pipeline.metadata_bytes if self.pipeline else 0,
             per_app_bytes=st.per_app,
         )
+
+    def _sanitize_final(
+        self, st: _ReplayState, io_seconds: float, drained: bool
+    ) -> None:
+        """End-of-replay invariants (sanitize mode): finite monotone
+        clocks, non-negative byte ledgers that close against the per-app
+        split, and — after a drain — an empty pipeline."""
+
+        _sanitize.check(
+            np.isfinite(st.clock) and st.clock >= 0.0,
+            "total_seconds non-finite or negative: %r", st.clock,
+        )
+        _sanitize.check(
+            np.isfinite(io_seconds) and 0.0 <= io_seconds <= st.clock,
+            "io_seconds %r outside [0, total_seconds=%r]",
+            io_seconds, st.clock,
+        )
+        _sanitize.check(
+            st.bytes_ssd >= 0 and st.bytes_hdd >= 0,
+            "negative byte ledger (ssd=%d, hdd=%d)",
+            st.bytes_ssd, st.bytes_hdd,
+        )
+        total = st.bytes_ssd + st.bytes_hdd
+        per_app = sum(st.per_app.values())
+        _sanitize.check(
+            total == per_app,
+            "byte ledger does not close: ssd+hdd=%d but per-app sum=%d",
+            total, per_app,
+        )
+        if self.pipeline is not None:
+            _sanitize.check(
+                self.pipeline.total_flushed_bytes <= st.bytes_ssd,
+                "flushed %d B from an SSD that only absorbed %d B",
+                self.pipeline.total_flushed_bytes, st.bytes_ssd,
+            )
+            if drained:
+                _sanitize.check(
+                    self.pipeline.flush_job is None,
+                    "drain left an active flush job",
+                )
+                left = sum(r.used_bytes for r in self.pipeline.regions)
+                _sanitize.check(
+                    left == 0, "drain left %d B buffered on the SSD", left
+                )
 
     # -- online session API (consumed by repro.service) -----------------
     #
@@ -422,7 +481,11 @@ class IONodeSimulator:
         :func:`repro.core.trace.compute_stream_scores`, same ``stream_len``)
         supplies every stream's random percentage / seek count / seek
         distance so the hot loop never re-sorts a stream on the host.  The
-        batched engine computes them itself when omitted."""
+        batched engine computes them itself when omitted.
+
+        Accuracy contract: ``engine="batched"`` is bit-identical to the
+        ``engine="per-request"`` oracle; ``engine="device"`` matches the
+        oracle to the ``DEVICE_TOLERANCES`` tiers."""
 
         if scores is not None and scores.stream_len != self.stream_len:
             raise ValueError(
@@ -436,12 +499,16 @@ class IONodeSimulator:
             )
             if scores is None:
                 scores = compute_stream_scores(batch, self.stream_len)
+            if self.sanitize:
+                batch.validate()
+                scores.validate()
             if self.engine == "device":
                 from . import engine_device  # deferred: needs jax
 
                 return engine_device.simulate_device(
                     batch,
                     scores,
+                    sanitize=self.sanitize,
                     scheme=self.scheme,
                     ssd_capacity=self.ssd_capacity,
                     hdd=self.hdd,
@@ -520,7 +587,8 @@ class IONodeSimulator:
             if self.scheme == "orangefs-bb":
                 device = Device.SSD  # plain BB caches everything it can
             else:
-                assert self.redirector is not None
+                if self.redirector is None:
+                    raise RuntimeError(f"scheme {self.scheme} needs a redirector")
                 routed = self.redirector.route_stream(stream, percentage=pct)
                 device = routed.device
             self._last_pct = pct
@@ -540,7 +608,10 @@ class IONodeSimulator:
                         # SSDUP/SSDUP+: wait for a region to free up
                         st.blocked_seconds += self._drain_current_flush(st)
                         out = self.pipeline.append(r.file_id, r.offset, r.size)
-                        assert out.ok, "append must succeed after drain"
+                        if not out.ok:
+                            raise RuntimeError(
+                                "append rejected after a full drain"
+                            )
                     self._advance_fg(
                         st, self.ssd.write_time(r.size), r.size,
                         hdd_foreground=False,
@@ -697,7 +768,62 @@ class IONodeSimulator:
         batched engine and the online session API).  ``force_hdd`` is the
         service layer's admission-control override: the detector still
         observes the stream (identical policy evolution), but its bytes
-        are written HDD-direct regardless of the routing decision."""
+        are written HDD-direct regardless of the routing decision.
+
+        With ``sanitize`` on, stream inputs (scores consistent with the
+        raw arrays, sane ranges) and the wall clock (monotonic, finite)
+        are checked around the replay."""
+
+        if not self.sanitize:
+            self._replay_stream_impl(
+                st, offsets, sizes, file_ids, nbytes=nbytes, pct=pct,
+                seeks=seeks, dist=dist, force_hdd=force_hdd,
+            )
+            return
+        t0 = st.clock
+        # one fused branch on the happy path; the per-condition checks
+        # re-run only on failure to produce a precise message
+        smin = int(sizes.min()) if len(sizes) else 0
+        ssum = int(sizes.sum())
+        if not (smin >= 0 and nbytes == ssum and 0.0 <= pct <= 1.0
+                and seeks >= 0 and dist >= 0):
+            _sanitize.check(smin >= 0, "negative request size in stream")
+            _sanitize.check(
+                nbytes == ssum,
+                "stream score nbytes=%d disagrees with sizes.sum()=%d",
+                nbytes, ssum,
+            )
+            _sanitize.check(
+                0.0 <= pct <= 1.0, "random percentage %r outside [0, 1]", pct
+            )
+            _sanitize.check(
+                seeks >= 0 and dist >= 0,
+                "negative seek score (seeks=%d, dist=%d)", seeks, dist,
+            )
+        self._replay_stream_impl(
+            st, offsets, sizes, file_ids, nbytes=nbytes, pct=pct,
+            seeks=seeks, dist=dist, force_hdd=force_hdd,
+        )
+        if not (st.clock >= t0 and math.isfinite(st.clock)):
+            _sanitize.check(
+                False,
+                "wall clock went backwards or non-finite across a stream "
+                "(%r -> %r)", t0, st.clock,
+            )
+
+    def _replay_stream_impl(
+        self,
+        st: _ReplayState,
+        offsets: np.ndarray,
+        sizes: np.ndarray,
+        file_ids: np.ndarray,
+        *,
+        nbytes: int,
+        pct: float,
+        seeks: int,
+        dist: int,
+        force_hdd: bool = False,
+    ) -> None:
 
         if self.scheme == "orangefs":
             self._advance_fg(
@@ -711,7 +837,8 @@ class IONodeSimulator:
         if self.scheme == "orangefs-bb":
             device = Device.SSD  # plain BB caches everything it can
         else:
-            assert self.redirector is not None
+            if self.redirector is None:
+                raise RuntimeError(f"scheme {self.scheme} needs a redirector")
             device = self.redirector.route_scored(nbytes, pct)
         self._last_pct = pct
         if force_hdd:
@@ -767,7 +894,8 @@ class IONodeSimulator:
                 out = self.pipeline.append(
                     int(file_ids[pos]), int(offsets[pos]), int(sizes[pos])
                 )
-                assert out.ok, "append must succeed after drain"
+                if not out.ok:
+                    raise RuntimeError("append rejected after a full drain")
             self._advance_ssd_run(st, walls[pos:pos + 1])
             st.bytes_ssd += int(sizes[pos])
             pos += 1
@@ -799,7 +927,10 @@ class IONodeSimulator:
                 out = self.pipeline.append(
                     int(file_ids[pos]), int(offsets[pos]), int(sizes[pos])
                 )
-                assert out.blocked
+                if not out.blocked:
+                    raise RuntimeError(
+                        "over-capacity append unexpectedly accepted"
+                    )
                 self.pipeline.blocked_events += n - pos - 1
                 overflow_from = pos
                 break
@@ -820,7 +951,8 @@ class IONodeSimulator:
                 out = self.pipeline.append(
                     int(file_ids[t]), int(offsets[t]), int(sizes[t])
                 )
-                assert out.ok
+                if not out.ok:
+                    raise RuntimeError("eager-flush trigger append rejected")
                 self._advance_ssd_run(st, walls[t:t + 1])
                 st.bytes_ssd += int(sizes[t])
                 pos = t + 1
@@ -851,6 +983,9 @@ def run_schemes(
     **kwargs,
 ) -> dict[str, SimResult]:
     """Run the same trace under several schemes (paper's comparison set).
+
+    Accuracy contract: same as :meth:`IONodeSimulator.run` — bit-identical
+    numpy engines, ``DEVICE_TOLERANCES`` tiers on the device engine.
 
     ``scores`` precomputed once (they are scheme-independent) is reused
     across every scheme's replay.

@@ -83,6 +83,27 @@ class TraceBatch:                               # __eq__ would raise
         if g and (np.any(self.gap_positions < 0) or np.any(self.gap_positions > r)):
             raise ValueError("gap position out of range")
 
+    def validate(self) -> None:
+        """Deep per-element invariants (sanitize mode; ``__post_init__``
+        only checks shapes).  Raises :class:`ValueError` on the first
+        violated one: non-negative sizes/offsets, finite non-negative gap
+        durations, non-decreasing gap positions and request times."""
+
+        if self.num_requests:
+            if np.any(self.sizes < 0):
+                raise ValueError("negative request size in trace")
+            if np.any(self.offsets < 0):
+                raise ValueError("negative request offset in trace")
+            if not np.all(np.isfinite(self.times)):
+                raise ValueError("non-finite request time in trace")
+        if self.num_gaps:
+            if np.any(np.diff(self.gap_positions) < 0):
+                raise ValueError("gap_positions must be non-decreasing")
+            if not np.all(np.isfinite(self.gap_seconds)):
+                raise ValueError("non-finite gap duration in trace")
+            if np.any(self.gap_seconds < 0):
+                raise ValueError("negative gap duration in trace")
+
     # -- constructors ---------------------------------------------------
     @classmethod
     def from_items(cls, items: Iterable[TraceItem]) -> "TraceBatch":
@@ -315,6 +336,24 @@ class StreamScores:                             # __eq__ would raise
 
     def __len__(self) -> int:
         return int(self.rf_sum.shape[0])
+
+    def validate(self) -> None:
+        """Deep per-element invariants (sanitize mode): every score row
+        in range — random percentage in [0, 1], non-negative seek sums,
+        byte counts and distances.  Raises :class:`ValueError`."""
+
+        n = len(self)
+        for name in ("percentage", "seek_distance", "nbytes", "offset_sum"):
+            if getattr(self, name).shape[0] != n:
+                raise ValueError(f"{name} length != rf_sum length {n}")
+        if n == 0:
+            return
+        if np.any(self.rf_sum < 0) or np.any(self.seek_distance < 0):
+            raise ValueError("negative seek score")
+        if np.any(self.nbytes < 0):
+            raise ValueError("negative stream byte count")
+        if np.any((self.percentage < 0.0) | (self.percentage > 1.0)):
+            raise ValueError("random percentage outside [0, 1]")
 
 
 SCORE_BACKENDS = ("numpy", "jnp", "pallas")

@@ -55,7 +55,11 @@ class ShardedLoader:
     """Per-host loader over the global batch."""
 
     def __init__(self, cfg: DataConfig, host_id: int):
-        assert cfg.global_batch % cfg.n_hosts == 0
+        if cfg.global_batch % cfg.n_hosts != 0:
+            raise ValueError(
+                f"global_batch {cfg.global_batch} not divisible by "
+                f"n_hosts {cfg.n_hosts}"
+            )
         self.cfg = cfg
         self.host_id = host_id
         self.source = SyntheticTokenSource(cfg)

@@ -131,7 +131,11 @@ def spec_for(
     rules = rules or _CTX.rules or DEFAULT_RULES
     if mesh is None:
         return P(*([None] * len(shape)))
-    assert len(shape) == len(logical), (shape, logical)
+    if len(shape) != len(logical):
+        raise ValueError(
+            f"shape rank {len(shape)} != logical rank {len(logical)}: "
+            f"{shape} vs {logical}"
+        )
     out: list[Any] = []
     used: set[str] = set()  # a mesh axis may appear at most once per spec
     for dim, name in zip(shape, logical):
@@ -169,7 +173,8 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
 def named_sharding(shape: Sequence[int], logical: Sequence[str | None],
                    mesh: Mesh | None = None) -> NamedSharding:
     mesh = mesh or _CTX.mesh
-    assert mesh is not None, "named_sharding requires an active or given mesh"
+    if mesh is None:
+        raise RuntimeError("named_sharding requires an active or given mesh")
     return NamedSharding(mesh, spec_for(shape, logical, mesh))
 
 

@@ -101,13 +101,17 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     b, h, sq, hd = q.shape
     _, kvh, sk, _ = k.shape
-    assert h % kvh == 0, (h, kvh)
+    if h % kvh != 0:
+        raise ValueError(f"heads {h} not divisible by kv heads {kvh}")
     n_rep = h // kvh
     if scale is None:
         scale = 1.0 / float(np.sqrt(hd))
     bq = min(block_q, sq)
     bk = min(block_k, sk)
-    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    if sq % bq != 0 or sk % bk != 0:
+        raise ValueError(
+            f"seq lens ({sq}, {sk}) not divisible by blocks ({bq}, {bk})"
+        )
     nq, nk = sq // bq, sk // bk
 
     from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415

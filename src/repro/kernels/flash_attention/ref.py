@@ -15,7 +15,8 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
                         scale: float | None = None) -> jnp.ndarray:
     b, h, sq, hd = q.shape
     kv = k.shape[1]
-    assert h % kv == 0
+    if h % kv != 0:
+        raise ValueError(f"heads {h} not divisible by kv heads {kv}")
     n_rep = h // kv
     if scale is None:
         scale = 1.0 / np.sqrt(hd)

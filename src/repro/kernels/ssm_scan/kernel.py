@@ -78,7 +78,10 @@ def ssm_scan(delta: jax.Array, B_ssm: jax.Array, C_ssm: jax.Array,
     n = B_ssm.shape[-1]
     bd = min(block_d, di)
     ck = min(chunk, s)
-    assert di % bd == 0 and s % ck == 0, (di, bd, s, ck)
+    if di % bd != 0 or s % ck != 0:
+        raise ValueError(
+            f"dims ({di}, {s}) not divisible by blocks ({bd}, {ck})"
+        )
     nd, nc = di // bd, s // ck
 
     kernel = functools.partial(_ssm_kernel, chunk=ck, num_chunks=nc)

@@ -104,7 +104,8 @@ def stream_rf(offsets: jax.Array, sizes: jax.Array,
     """
 
     m, n = offsets.shape
-    assert n & (n - 1) == 0, f"stream length {n} must be a power of two"
+    if n & (n - 1) != 0:
+        raise ValueError(f"stream length {n} must be a power of two")
     offsets = jnp.asarray(offsets, jnp.int32)
     sizes = jnp.broadcast_to(jnp.asarray(sizes, jnp.int32), offsets.shape)
 
@@ -143,7 +144,8 @@ def stream_stats(offsets: jax.Array, sizes: jax.Array,
     """
 
     m, n = offsets.shape
-    assert n & (n - 1) == 0, f"stream length {n} must be a power of two"
+    if n & (n - 1) != 0:
+        raise ValueError(f"stream length {n} must be a power of two")
     offsets = jnp.asarray(offsets, jnp.int32)
     sizes = jnp.broadcast_to(jnp.asarray(sizes, jnp.int32), offsets.shape)
 

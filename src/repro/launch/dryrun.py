@@ -309,7 +309,8 @@ def main() -> None:
     if args.all:
         archs = ARCHITECTURES
     else:
-        assert args.arch, "--arch or --all required"
+        if not args.arch:
+            raise SystemExit("--arch or --all required")
         archs = [args.arch]
 
     failures = []

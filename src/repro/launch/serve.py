@@ -86,8 +86,10 @@ def main() -> None:
           f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s)")
     for b in range(min(args.batch, 2)):
         print(f"[serve] seq{b}: {gen[b][:16].tolist()}...")
-    assert gen.shape == (args.batch, args.gen)
-    assert np.all(gen >= 0) and np.all(gen < cfg.padded_vocab)
+    if gen.shape != (args.batch, args.gen):
+        raise RuntimeError(f"bad generation shape {gen.shape}")
+    if not (np.all(gen >= 0) and np.all(gen < cfg.padded_vocab)):
+        raise RuntimeError("generated token ids out of vocab range")
     print("[serve] ok")
 
 

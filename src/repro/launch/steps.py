@@ -33,7 +33,8 @@ def make_train_step(model: ModelApi, opt_cfg: AdamWConfig | None = None,
         from repro.models.layers import scan as _scan  # unroll-aware
 
         b = batch["tokens"].shape[0]
-        assert b % mb == 0, (b, mb)
+        if b % mb != 0:
+            raise ValueError(f"batch {b} not divisible by microbatch {mb}")
         a = b // mb
         resh = jax.tree.map(lambda x: x.reshape(a, mb, *x.shape[1:]), batch)
         zeros = jax.tree.map(

@@ -133,7 +133,8 @@ def main() -> None:
     print(f"[train] done: {args.steps - start_step} steps in {wall:.1f}s; "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     if len(losses) > 20:
-        assert np.mean(losses[-10:]) < np.mean(losses[:10]), "no learning?"
+        if np.mean(losses[-10:]) >= np.mean(losses[:10]):
+            raise RuntimeError("no learning: loss did not decrease")
 
 
 if __name__ == "__main__":

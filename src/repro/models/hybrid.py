@@ -27,9 +27,13 @@ Tree = dict
 
 
 def n_groups(cfg: ModelConfig) -> int:
-    assert cfg.shared_attn_every > 0
-    assert cfg.n_layers % cfg.shared_attn_every == 0, (
-        cfg.n_layers, cfg.shared_attn_every)
+    if cfg.shared_attn_every <= 0:
+        raise ValueError("shared_attn_every must be positive")
+    if cfg.n_layers % cfg.shared_attn_every != 0:
+        raise ValueError(
+            f"n_layers {cfg.n_layers} not divisible by "
+            f"shared_attn_every {cfg.shared_attn_every}"
+        )
     return cfg.n_layers // cfg.shared_attn_every
 
 

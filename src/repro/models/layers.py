@@ -202,7 +202,8 @@ def _attend_chunked(q, k, v, n_rep, scale, causal, smax=jnp.float32):
 
     b, sq, h, hd = q.shape
     qc = min(_Q_CHUNK.get(), sq)
-    assert sq % qc == 0, (sq, qc)
+    if sq % qc != 0:
+        raise ValueError(f"seq {sq} not divisible by query chunk {qc}")
     nq = sq // qc
     qs = q.reshape(b, nq, qc, h, hd).swapaxes(0, 1)  # (nq,B,qc,H,hd)
     offsets = jnp.arange(nq) * qc
@@ -299,7 +300,8 @@ def attention(
                                 smax=jnp.dtype(cfg.softmax_dtype))
         new_cache = (k, v)
     else:
-        assert x.shape[1] == 1, "decode path expects one new token"
+        if x.shape[1] != 1:
+            raise ValueError("decode path expects one new token")
         ck, cv = kv_cache  # (B, S_ctx, KV, hd); seq dim sharded "cache_seq"
         pos = cache_position
         ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
@@ -359,7 +361,8 @@ def moe_mlp(cfg: ModelConfig, w: Params, x: jax.Array) -> jax.Array:
     e = cfg.n_experts
     k = cfg.experts_per_token
     g = min(cfg.moe_group_size, s)
-    assert s % g == 0, f"seq {s} not divisible by moe group {g}"
+    if s % g != 0:
+        raise ValueError(f"seq {s} not divisible by moe group {g}")
     ng = s // g
     cap = max(int(np.ceil(g * k / e * cfg.capacity_factor)), 1)
 

@@ -145,7 +145,8 @@ def _embed_inputs(cfg: ModelConfig, params: Tree, tokens: jax.Array,
                   patch_embeds: jax.Array | None) -> jax.Array:
     x = L.embed_tokens(cfg, params["tok_emb"], tokens)
     if cfg.family == "vlm":
-        assert patch_embeds is not None, "vlm family needs patch_embeds"
+        if patch_embeds is None:
+            raise ValueError("vlm family needs patch_embeds")
         p = patch_embeds.shape[1]
         x = jnp.concatenate(
             [patch_embeds.astype(x.dtype), x[:, p:, :]], axis=1

@@ -48,7 +48,8 @@ def _rowwise(x: jax.Array) -> jax.Array:
 def encode(x: jax.Array, bits: int = 8) -> tuple[jax.Array, jax.Array]:
     """Symmetric per-row int quantization.  Returns (q, scales)."""
 
-    assert bits in (4, 8)
+    if bits not in (4, 8):
+        raise ValueError(f"bits must be 4 or 8, got {bits}")
     qmax = (1 << (bits - 1)) - 1
     rows = _rowwise(x.astype(jnp.float32))
     scales = jnp.max(jnp.abs(rows), axis=1, keepdims=True) / qmax

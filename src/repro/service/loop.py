@@ -46,6 +46,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.fleet import FleetResult
 from repro.core.random_factor import DEFAULT_STREAM_LEN
 from repro.core.simulator import IONodeSimulator, SimResult
@@ -212,6 +213,7 @@ class BurstBufferService:
         admission_action: str = "redirect",
         rebalance_fraction: float = 0.5,
         max_epochs: int = 1_000_000,
+        sanitize: bool | None = None,
         **node_kwargs,
     ):
         if num_nodes < 1:
@@ -244,6 +246,7 @@ class BurstBufferService:
         self.admission_action = admission_action
         self.rebalance_fraction = rebalance_fraction
         self.max_epochs = max_epochs
+        self.sanitize = _sanitize.resolve(sanitize)
         self.node_kwargs = node_kwargs
         self._now = 0.0
 
@@ -251,7 +254,7 @@ class BurstBufferService:
     def _make_sim(self) -> IONodeSimulator:
         sim = IONodeSimulator(
             scheme=self.scheme, stream_len=self.stream_len,
-            engine="batched", **self.node_kwargs,
+            engine="batched", sanitize=self.sanitize, **self.node_kwargs,
         )
         sim.begin_session()
         return sim
@@ -380,6 +383,12 @@ class BurstBufferService:
                 lane.results.append(res)
                 self._account_session(lane.sim, res, 0, metrics)
         metrics.makespan_seconds = max((l.wall for l in lanes), default=0.0)
+        if self.sanitize:
+            violations = metrics.conservation_violations()
+            _sanitize.check(
+                not violations,
+                "service byte ledger violated: %s", "; ".join(violations),
+            )
         return ServiceResult(
             scheme=self.scheme,
             policy=self.policy,

@@ -32,10 +32,12 @@ divergence (same check the golden tests run).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import pathlib
 from typing import Sequence
 
+from repro.analysis import sanitize as _sanitize
 from repro.core import FleetSimulator, FleetResult, SimResult
 
 from .traces import golden_trace, trace_fingerprint
@@ -345,20 +347,27 @@ def main(argv: Sequence[str] | None = None) -> int:
                     help="(re)generate every fixture under tests/golden/")
     ap.add_argument("--check", action="store_true",
                     help="replay committed fixtures; nonzero on divergence")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="replay with runtime invariant checks armed "
+                         "(equivalent to REPRO_SANITIZE=1); results must "
+                         "stay bit-identical")
     args = ap.parse_args(argv)
-    if args.write:
-        for path in generate_all():
-            print(f"wrote {path}")
-        return 0
-    if args.check:
-        bad = 0
-        for path in sorted(GOLDEN_DIR.glob("*__*.json")):
-            payload = load_fixture(path)
-            diffs = check_fixture(payload, replay_fixture(payload))
-            status = diffs[0] if diffs else "ok"
-            print(f"{path.name}: {status}")
-            bad += bool(diffs)
-        return 1 if bad else 0
+    with contextlib.ExitStack() as stack:
+        if args.sanitize:
+            stack.enter_context(_sanitize.sanitizing())
+        if args.write:
+            for path in generate_all():
+                print(f"wrote {path}")
+            return 0
+        if args.check:
+            bad = 0
+            for path in sorted(GOLDEN_DIR.glob("*__*.json")):
+                payload = load_fixture(path)
+                diffs = check_fixture(payload, replay_fixture(payload))
+                status = diffs[0] if diffs else "ok"
+                print(f"{path.name}: {status}")
+                bad += bool(diffs)
+            return 1 if bad else 0
     ap.print_help()
     return 2
 

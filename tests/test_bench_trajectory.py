@@ -136,7 +136,7 @@ class TestRunCheckExit:
     def test_check_passes_without_anchor(self, monkeypatch, tmp_path):
         main = self._patched_run(monkeypatch, tmp_path, us=100.0)
         assert main(["--check"]) == 0
-        assert (tmp_path / "BENCH_6.json").exists()
+        assert (tmp_path / perf.bench_filename(perf.CURRENT_INDEX)).exists()
 
     def test_check_passes_on_improvement(self, monkeypatch, tmp_path):
         anchor = build_trajectory({"dummy": {"dummy_row": 1000.0}}, index=5)

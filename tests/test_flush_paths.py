@@ -208,3 +208,50 @@ def test_engines_agree_across_gap_budgets(scheme, gap_s):
     a, b = run_both_engines(items, scheme, ssd_capacity=20 * REQ)
     assert_equal_results(a, b)
     assert a.total_bytes == 3 * STREAM_LEN * REQ
+
+
+class TestOversizedRequestPlainBB:
+    """Regression: an oversized request hitting an EMPTY single-region
+    buffer used to schedule a zero-byte FlushJob that could never
+    complete (``flush_progress`` ignores ``nbytes <= 0``), wedging the
+    end-of-trace drain loop forever.  The buffer must instead reject the
+    request with no phantom job, and the simulator routes it to HDD."""
+
+    def test_empty_buffer_rejects_without_phantom_job(self):
+        buf = SingleRegionBuffer(MiB)
+        out = buf.append(file_id=0, offset=0, size=2 * MiB)
+        assert out.blocked and not out.ok
+        assert buf.flush_job is None  # no zero-byte job scheduled
+        assert buf.blocked_events == 1
+        assert buf.flushes_completed == 0
+        assert buf.drain() == []  # nothing to drain; finalize terminates
+
+    def test_oversized_requests_complete_and_land_on_hdd(self):
+        # every request exceeds the SSD: plain BB overflows all of them
+        trace = [Request(offset=i * 4 * MiB, size=2 * MiB, file_id=0)
+                 for i in range(4)]
+        a, b = run_both_engines(trace, "orangefs-bb", ssd_capacity=MiB)
+        assert_equal_results(a, b)
+        assert a.bytes_to_ssd == 0
+        assert a.bytes_to_hdd_direct == 4 * 2 * MiB
+        assert a.flushes == 0
+
+    def test_oversized_after_buffered_data_still_flushes(self):
+        # a real job exists for the buffered prefix; the oversized
+        # request overflows but must not disturb that job's accounting
+        trace = ([Request(offset=i * REQ, size=REQ, file_id=0)
+                  for i in range(4)]
+                 + [Request(offset=64 * MiB, size=2 * MiB, file_id=1)])
+        a, b = run_both_engines(trace, "orangefs-bb", ssd_capacity=MiB)
+        assert_equal_results(a, b)
+        assert a.bytes_to_ssd == 4 * REQ
+        assert a.bytes_to_hdd_direct == 2 * MiB
+        assert a.flushes >= 1
+
+    def test_two_region_oversized_still_raises(self):
+        # the two-region pipeline's contract is unchanged: a request
+        # larger than a region is a configuration error
+        pipe = TwoRegionPipeline(MiB)
+        with pytest.raises(ValueError, match="exceeds region capacity"):
+            for i in range(64):
+                pipe.append(file_id=0, offset=i * 4 * MiB, size=2 * MiB)

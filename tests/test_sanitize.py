@@ -1,0 +1,209 @@
+"""Runtime sanitizer mode: enablement plumbing, bit-exactness of the
+golden fixture matrix with every invariant armed, and seeded-bug tests
+proving each wired layer actually catches its class of violation."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis import SanitizerError, sanitizing
+from repro.analysis import sanitize as sanitize_mod
+from repro.core import IONodeSimulator, ior, relabel
+from repro.core.fleet import FleetSimulator
+from repro.core.simulator import _ReplayState
+from repro.core.trace import TraceBatch
+from repro.core.workloads import MiB
+from repro.service import BurstBufferService
+from repro.testing import golden
+
+
+def small_batch(seed: int = 0, total: int = 32 * MiB) -> TraceBatch:
+    items = list(
+        relabel(ior("segmented-random", 8, total_bytes=total, seed=seed),
+                app_id=0, file_id=0).trace
+    )
+    return TraceBatch.from_items(items)
+
+
+# -- enablement plumbing -------------------------------------------------
+
+
+class TestEnablement:
+    def test_default_off(self, monkeypatch):
+        monkeypatch.delenv(sanitize_mod.ENV_VAR, raising=False)
+        assert not sanitize_mod.enabled()
+
+    @pytest.mark.parametrize("value", ["1", "true", "YES", " on "])
+    def test_env_var_truthy(self, monkeypatch, value):
+        monkeypatch.setenv(sanitize_mod.ENV_VAR, value)
+        assert sanitize_mod.enabled()
+
+    def test_env_var_falsy(self, monkeypatch):
+        monkeypatch.setenv(sanitize_mod.ENV_VAR, "0")
+        assert not sanitize_mod.enabled()
+
+    def test_context_overrides_env(self, monkeypatch):
+        monkeypatch.setenv(sanitize_mod.ENV_VAR, "1")
+        with sanitizing(False):
+            assert not sanitize_mod.enabled()
+        assert sanitize_mod.enabled()
+
+    def test_context_nests_and_restores(self):
+        with sanitizing():
+            assert sanitize_mod.enabled()
+            with sanitizing(False):
+                assert not sanitize_mod.enabled()
+            assert sanitize_mod.enabled()
+        assert not sanitize_mod.enabled()
+
+    def test_explicit_arg_beats_override(self):
+        with sanitizing():
+            assert not IONodeSimulator(sanitize=False).sanitize
+        assert IONodeSimulator(sanitize=True).sanitize
+        assert not IONodeSimulator().sanitize
+
+    def test_check_raises_with_formatting(self):
+        sanitize_mod.check(True, "never raised")
+        with pytest.raises(SanitizerError, match="got 3"):
+            sanitize_mod.check(False, "got %d", 3)
+
+
+# -- the smoke test: golden matrix bit-exact with checks armed -----------
+
+
+class TestGoldenMatrixSanitized:
+    @pytest.mark.parametrize(
+        "scheme", golden.FIXTURE_SCHEMES, ids=str
+    )
+    def test_fixture_replay_bit_exact_under_sanitize(self, scheme):
+        for workload in golden.FIXTURE_WORKLOADS:
+            for policy in golden.FIXTURE_POLICIES:
+                path = golden.fixture_path(scheme, workload, policy)
+                payload = golden.load_fixture(path)
+                with sanitizing():
+                    result = golden.replay_fixture(payload)
+                diffs = golden.check_fixture(payload, result)
+                assert diffs == [], diffs[0]
+
+
+class TestSanitizeIsPure:
+    @pytest.mark.parametrize("scheme", ["orangefs-bb", "ssdup+"])
+    def test_results_identical_with_and_without(self, scheme):
+        batch = small_batch()
+        base = IONodeSimulator(
+            scheme=scheme, ssd_capacity=8 * MiB
+        ).run(batch)
+        san = IONodeSimulator(
+            scheme=scheme, ssd_capacity=8 * MiB, sanitize=True
+        ).run(batch)
+        for f in dataclasses.fields(base):
+            assert getattr(base, f.name) == getattr(san, f.name), f.name
+
+
+# -- seeded bugs: every wired layer must catch its violation class -------
+
+
+class TestCatchesInjectedBugs:
+    def test_backwards_clock_caught(self, monkeypatch):
+        sim = IONodeSimulator(scheme="ssdup+", sanitize=True)
+        impl = IONodeSimulator._replay_stream_impl
+
+        def warped(self, st, *args, **kwargs):
+            before = st.clock
+            impl(self, st, *args, **kwargs)
+            st.clock = before - 1.0  # simulated accounting bug
+
+        monkeypatch.setattr(
+            IONodeSimulator, "_replay_stream_impl", warped
+        )
+        with pytest.raises(SanitizerError, match="backwards"):
+            sim.run(small_batch())
+
+    def test_score_trace_mismatch_caught(self):
+        sim = IONodeSimulator(scheme="ssdup+", sanitize=True)
+        st = _ReplayState()
+        with pytest.raises(SanitizerError, match="disagrees"):
+            sim._replay_stream(
+                st,
+                np.array([0], dtype=np.int64),
+                np.array([1024], dtype=np.int64),
+                np.array([0], dtype=np.int64),
+                nbytes=4096,  # wrong: scores from a different trace
+                pct=0.5, seeks=1, dist=0,
+            )
+
+    def test_negative_gap_caught(self):
+        sim = IONodeSimulator(scheme="ssdup+", sanitize=True)
+        sim.begin_session()
+        with pytest.raises(SanitizerError, match="non-negative"):
+            sim.feed_gap(-1.0)
+
+    def test_invalid_trace_rejected(self):
+        batch = small_batch()
+        bad = dataclasses.replace(
+            batch, sizes=batch.sizes * np.int64(-1)
+        )
+        sim = IONodeSimulator(scheme="orangefs", sanitize=True)
+        with pytest.raises(ValueError, match="negative request size"):
+            sim.run(bad)
+
+    def test_fleet_shard_loss_caught(self, monkeypatch):
+        fleet = FleetSimulator(
+            num_nodes=2, scheme="orangefs", sanitize=True
+        )
+        def lossy(self, batch):
+            assignment = np.arange(batch.num_requests, dtype=np.int64) % 2
+            shard0, shard1 = batch.shard(assignment, 2)
+            return [shard0, shard1.shard(  # silently drop node 1's work
+                np.full(shard1.num_requests, 1, dtype=np.int64), 2)[0]]
+
+        monkeypatch.setattr(FleetSimulator, "shard", lossy)
+        with pytest.raises(SanitizerError, match="sharding dropped"):
+            fleet.run(small_batch())
+
+    def test_service_ledger_violation_caught(self, monkeypatch):
+        original = BurstBufferService._account_session
+
+        def tampered(self, sim, res, outstanding, metrics):
+            original(self, sim, res, outstanding, metrics)
+            metrics.written_ssd_bytes += 4096  # phantom SSD bytes
+
+        monkeypatch.setattr(
+            BurstBufferService, "_account_session", tampered
+        )
+        svc = BurstBufferService(
+            scheme="ssdup+", num_nodes=2, sanitize=True
+        )
+        with pytest.raises(SanitizerError, match="ledger"):
+            svc.run(small_batch())
+        # without sanitize the same bug sails through silently (the
+        # violation is still *recorded*, proving the ledger math saw it)
+        svc2 = BurstBufferService(scheme="ssdup+", num_nodes=2)
+        result = svc2.run(small_batch())
+        assert result.metrics.conservation_violations()
+
+    def test_device_nan_caught(self):
+        from repro.core import engine_device
+        from repro.core.trace import compute_stream_scores
+
+        batch = small_batch()
+        scores = compute_stream_scores(batch, 128)
+        tape = dict(
+            engine_device.build_events(batch, scores, stream_len=128)
+        )
+        tape["net_t"] = tape["net_t"].copy()
+        tape["net_t"][0] = np.nan  # NaN smuggled into a valid event
+        events = engine_device.stack_events([tape])
+        lanes = engine_device._stack_lanes(
+            [engine_device.lane_consts("ssdup+", 8 << 30, 0.5)]
+        )
+        state0 = engine_device._stack_lanes(
+            [engine_device.initial_lane_state("ssdup+", 64, None)]
+        )
+        with pytest.raises(SanitizerError, match="non-finite"):
+            with sanitizing():
+                engine_device.replay_lanes(events, lanes, state0)
+        # unsanitized, the NaN silently poisons the result
+        out = engine_device.replay_lanes(events, lanes, state0)
+        assert np.isnan(out["io_seconds"][0])

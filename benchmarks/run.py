@@ -34,6 +34,7 @@ from benchmarks import (  # noqa: E402
     bench_checkpoint,
     bench_device_replay,
     bench_fleet,
+    bench_ftl,
     bench_hpio,
     bench_kernels,
     bench_overhead,
@@ -60,6 +61,7 @@ SUITES = {
     "kernels": lambda tb: bench_kernels.run(),
     "shardmap_decode": lambda tb: bench_shardmap_decode.run(),
     "fleet": lambda tb: bench_fleet.run(tb),
+    "ftl": lambda tb: bench_ftl.run(tb),
     "replay": lambda tb: bench_replay.run(tb),
     "device_replay": lambda tb: bench_device_replay.run(tb),
     "service": lambda tb: bench_service.run(tb),

@@ -26,7 +26,16 @@ Layering:
 from .adaptive import AdaptiveThreshold, StaticWatermarkThreshold
 from .avl import AVLTree, Extent
 from .burst_buffer import BurstBufferWriter
-from .device_model import HDDModel, InterferenceModel, SSDModel
+from .device_model import (
+    STORAGE_BACKENDS,
+    HDDModel,
+    InterferenceModel,
+    SSDModel,
+    StorageModel,
+    clone_storage,
+    make_storage_model,
+)
+from .ftl import FTLModel
 from .extent_index import INDEX_BACKENDS, ExtentIndex, make_index
 from .log_store import LogRegion, RegionFullError
 from .pipeline import FlushState, SingleRegionBuffer, TwoRegionPipeline
@@ -65,6 +74,11 @@ __all__ = [
     "BurstBufferWriter",
     "HDDModel",
     "SSDModel",
+    "StorageModel",
+    "FTLModel",
+    "STORAGE_BACKENDS",
+    "make_storage_model",
+    "clone_storage",
     "InterferenceModel",
     "LogRegion",
     "RegionFullError",

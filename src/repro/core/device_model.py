@@ -32,6 +32,53 @@ seek count cannot see; scheme *comparisons* are unaffected (EXPERIMENTS.md
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING, Any, ClassVar, Protocol, runtime_checkable
+
+import numpy as np
+
+if TYPE_CHECKING:
+    from .ftl import FTLModel
+
+
+@runtime_checkable
+class StorageModel(Protocol):
+    """Pluggable SSD timing backend threaded through all four engines.
+
+    Two shipped backends: the stateless constant-bandwidth
+    :class:`SSDModel` (``ssd="constant"``, the default — bit-exact with
+    the pre-refactor inline ``nbytes / write_bw`` math everywhere) and
+    the stateful page-mapped :class:`~repro.core.ftl.FTLModel`
+    (``ssd="ftl"`` — GC, channel striping, measured write
+    amplification).  Engines branch on ``stateful``: stateless models
+    may be charged without offsets (vectorized, order-free); stateful
+    models are charged with per-request LBAs in arrival order and get
+    :meth:`trim` calls when a flushed region's content dies.
+    """
+
+    stateful: bool
+    name: str
+    read_bw: float
+
+    def charge_write(
+        self,
+        offsets: np.ndarray | None,
+        sizes: np.ndarray,
+        t: float = 0.0,
+    ) -> np.ndarray:
+        """Per-request SSD service times (seconds, float64) for a batch."""
+        ...
+
+    def write_time(self, nbytes: int) -> float: ...
+
+    def read_time(self, nbytes: int) -> float: ...
+
+    def trim(self, offset: int, nbytes: int) -> None: ...
+
+    def clone(self) -> "StorageModel": ...
+
+    def degraded(self, factor: float) -> "StorageModel": ...
+
+    def config_fingerprint(self) -> dict[str, Any]: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,17 +107,116 @@ class HDDModel:
 
 @dataclasses.dataclass(frozen=True)
 class SSDModel:
-    """Flash model: bandwidth-only, near-zero seek (paper Section 2.5)."""
+    """Flash model: bandwidth-only, near-zero seek (paper Section 2.5).
+
+    The ``ssd="constant"`` storage backend.  Stateless: ``charge_write``
+    is exactly ``sizes / write_bw`` elementwise (same IEEE operations as
+    the pre-refactor inline math, so every golden fixture stays
+    bit-exact) and ``trim`` is a no-op.
+    """
 
     write_bw: float = 380e6  # bytes/s sequential (log-structured appends)
     read_bw: float = 450e6  # bytes/s (random reads ~ sequential on flash)
     name: str = "ssd"
+    stateful: ClassVar[bool] = False
 
     def write_time(self, nbytes: int) -> float:
         return nbytes / self.write_bw
 
     def read_time(self, nbytes: int) -> float:
         return nbytes / self.read_bw
+
+    def charge_write(
+        self,
+        offsets: np.ndarray | None,
+        sizes: np.ndarray,
+        t: float = 0.0,
+    ) -> np.ndarray:
+        """Per-request SSD write times; stateless, so offsets/t are
+        ignored and the result is exactly ``sizes / write_bw``."""
+
+        del offsets, t
+        return np.asarray(sizes) / self.write_bw
+
+    def trim(self, offset: int, nbytes: int) -> None:
+        """No device state to invalidate in the constant model."""
+
+    def clone(self) -> "SSDModel":
+        return self  # immutable: safe to share across nodes
+
+    def degraded(self, factor: float) -> "SSDModel":
+        """New model with bandwidths scaled by ``factor`` (< 1 degrades)."""
+
+        if not factor > 0.0:
+            raise ValueError(f"degradation factor must be > 0, got {factor!r}")
+        return dataclasses.replace(
+            self, write_bw=self.write_bw * factor, read_bw=self.read_bw * factor
+        )
+
+    def config_fingerprint(self) -> dict[str, Any]:
+        return {
+            "name": "constant",
+            "write_bw": float(self.write_bw),
+            "read_bw": float(self.read_bw),
+        }
+
+
+STORAGE_BACKENDS = ("constant", "ftl")
+
+
+def make_storage_model(
+    spec: "StorageModel | str | None",
+    logical_bytes: int = 0,
+    **kwargs: Any,
+) -> "StorageModel":
+    """Resolve an ``ssd=`` spec into a :class:`StorageModel` instance.
+
+    ``None`` / ``"constant"`` build the stateless :class:`SSDModel`;
+    ``"ftl"`` builds an :class:`~repro.core.ftl.FTLModel` sized to
+    ``logical_bytes`` (the buffer capacity it backs); an object that
+    already implements the protocol passes through unchanged.
+    """
+
+    if spec is None or (isinstance(spec, str) and spec == "constant"):
+        return SSDModel(**kwargs)
+    if isinstance(spec, str):
+        if spec == "ftl":
+            from .ftl import FTLModel
+
+            if logical_bytes <= 0:
+                raise ValueError(
+                    "ssd='ftl' needs a positive buffer capacity to size "
+                    "the logical address space"
+                )
+            return FTLModel(logical_bytes=logical_bytes, **kwargs)
+        raise ValueError(
+            f"unknown storage model {spec!r}; choose from "
+            f"{STORAGE_BACKENDS} or pass a StorageModel instance"
+        )
+    if isinstance(spec, StorageModel):
+        return spec
+    raise TypeError(
+        f"ssd= expects {STORAGE_BACKENDS}, None, or a StorageModel "
+        f"instance; got {type(spec).__name__}"
+    )
+
+
+def clone_storage(
+    spec: "StorageModel | str | None",
+) -> "StorageModel | str | None":
+    """Per-node copy of an ``ssd=`` spec.
+
+    Stateful instances are cloned so fleet nodes and scheme sweeps never
+    share FTL mapping state; strings/None resolve to fresh models per
+    node anyway and stateless instances are immutable, so both pass
+    through unchanged.
+    """
+
+    if isinstance(spec, str) or spec is None:
+        return spec
+    if getattr(spec, "stateful", False):
+        return spec.clone()
+    return spec
 
 
 @dataclasses.dataclass(frozen=True)

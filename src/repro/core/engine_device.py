@@ -427,7 +427,7 @@ def build_events(
     scores,
     stream_len: int = DEFAULT_STREAM_LEN,
     hdd: HDDModel | None = None,
-    ssd: SSDModel | None = None,
+    ssd: "SSDModel | object | None" = None,
     link: IngestLink | None = None,
 ) -> dict[str, np.ndarray]:
     """Lower one shard into its event tape (struct-of-arrays, length E).
@@ -556,22 +556,63 @@ def stack_events(
 
 
 def lane_consts(
-    scheme: str, ssd_capacity: int, flush_gate: float = 0.5
+    scheme: str,
+    ssd_capacity: int,
+    flush_gate: float | str = 0.5,
+    ssd: object | None = None,
 ) -> dict[str, object]:
-    """Per-lane scalar constants (scheme id, region capacity, gate)."""
+    """Per-lane scalar constants (scheme id, region capacity, gate,
+    storage-model geometry).
+
+    ``flush_gate="device"`` (flush-gate v2) is encoded as the sentinel
+    ``gate = -1.0``: the gate then follows the foreground device instead
+    of the detector percentage.  A stateful ``ssd`` (FTL) contributes
+    its page/GC geometry as ``ftl_*`` constants; stateless lanes get
+    inert defaults (``ftl_on=False``) so the jitted step stays one
+    program for mixed fleets.
+    """
 
     if scheme not in SCHEME_IDS:
         raise ValueError(f"unknown scheme {scheme!r}")
+    if isinstance(flush_gate, str):
+        if flush_gate != "device":
+            raise ValueError(
+                f"flush_gate must be a float or 'device', got {flush_gate!r}"
+            )
+        gate = -1.0
+    else:
+        gate = float(flush_gate)
     if scheme == "orangefs":
         cap = 0
     elif scheme == "orangefs-bb":
         cap = int(ssd_capacity)
     else:  # two-region pipeline: half the SSD per region
         cap = int(ssd_capacity) // 2
+    ftl_on = bool(ssd is not None and getattr(ssd, "stateful", False))
+    if ftl_on:
+        page = float(ssd.page_size)
+        tpp = float(ssd.t_page)
+        terase = float(ssd.t_erase / ssd.n_channels)
+        ppb = float(ssd.pages_per_block)
+        phys = float(ssd.total_pages)
+        low = float(ssd.gc_low_blocks * ssd.pages_per_block)
+        high = float(ssd.gc_high_blocks * ssd.pages_per_block)
+    else:  # inert defaults keep the where()-discarded branch NaN-free
+        page, tpp, terase, ppb, phys, low, high = (
+            1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0,
+        )
     return {
         "scheme": np.int32(SCHEME_IDS[scheme]),
         "cap": np.int64(cap),
-        "gate": np.float64(flush_gate),
+        "gate": np.float64(gate),
+        "ftl_on": np.bool_(ftl_on),
+        "ftl_page": np.float64(page),
+        "ftl_tpp": np.float64(tpp),
+        "ftl_terase": np.float64(terase),
+        "ftl_ppb": np.float64(ppb),
+        "ftl_phys": np.float64(phys),
+        "ftl_low": np.float64(low),
+        "ftl_high": np.float64(high),
     }
 
 
@@ -579,6 +620,7 @@ def initial_lane_state(
     scheme: str,
     window: int,
     threshold_warmup: Sequence[float] | None = None,
+    ssd: object | None = None,
 ) -> dict[str, np.ndarray]:
     """One lane's initial state struct (numpy; stacked by the caller).
 
@@ -609,6 +651,13 @@ def initial_lane_state(
             static_rand = StaticWatermarkThreshold().seed(
                 threshold_warmup
             )._last_random
+    # FTL occupancy columns mirror the (possibly pre-used) host model
+    if ssd is not None and getattr(ssd, "stateful", False):
+        ftl_free = float(ssd.free_pages)
+        ftl_live = float(ssd.live_pages)
+    else:
+        ftl_free = 0.0
+        ftl_live = 0.0
     return {
         "clock": np.float64(0.0),
         "gap": np.float64(0.0),
@@ -633,6 +682,10 @@ def initial_lane_state(
         "win_p": np.int32(win_p),
         "static_rand": np.bool_(static_rand),
         "cur_ssd": np.bool_(False),  # paper: apps start writing the HDD
+        # FTL lane-state columns (zeros on constant-backend lanes)
+        "ftl_free": np.float64(ftl_free),
+        "ftl_live": np.float64(ftl_live),
+        "ftl_reloc": np.float64(0.0),
     }
 
 
@@ -700,8 +753,14 @@ def _observe_and_route(g, lane, st, pct):
     cur2 = jnp.where(pct > thr, True, jnp.where(pct < thr, False, cur))
 
     # traffic-aware gate (Section 2.4.2): only ssdup+ pauses; BB jobs are
-    # forced and ssdup flushes immediately
-    allowed = jnp.where(is_plus, pct >= lane["gate"], True)
+    # forced and ssdup flushes immediately.  gate < 0 is the sentinel for
+    # flush_gate="device" (v2): flush exactly while the foreground stream
+    # writes the SSD (HDD quiet), pause when it writes the HDD
+    allowed = jnp.where(
+        is_plus,
+        jnp.where(lane["gate"] < 0.0, dev_ssd, pct >= lane["gate"]),
+        True,
+    )
 
     upd = {
         "win": win2,
@@ -750,13 +809,39 @@ def _ssd_fill_loop(g, lane, st, ev, allowed, dev_ssd):
         fill_cap = jnp.where(is_bb, jnp.minimum(room, bb_cap), tr_cap)
         fill = jnp.where(bb_ovf, 0, jnp.minimum(c["rem"], fill_cap))
         frac = fill / nb_f
-        segw = ev["ssd_w"] * frac
+        # -- storage-model device time for this fill.  Constant backend:
+        # the pro-rated per-request SSD wall sum (bit-path identical to
+        # the pre-FTL engine).  FTL backend: page programs on N channels
+        # plus an analytic greedy-GC charge when the fill dips the free
+        # pool below the low watermark — the aggregate counterpart of
+        # FTLModel._collect with u = mean valid fraction of written
+        # blocks (greedy victims are at-most-average, so clip at 0.97).
+        pages = fill.astype(jnp.float64) / lane["ftl_page"]
+        free1 = c["ftl_free"] - pages
+        live1 = c["ftl_live"] + pages
+        gc_on = lane["ftl_on"] & (fill > 0) & (free1 < lane["ftl_low"])
+        u = jnp.clip(
+            live1 / jnp.maximum(lane["ftl_phys"] - free1, 1.0), 0.0, 0.97
+        )
+        need = jnp.maximum(lane["ftl_high"] - free1, 0.0)
+        nblk = need / jnp.maximum(lane["ftl_ppb"] * (1.0 - u), 1.0)
+        reloc = nblk * lane["ftl_ppb"] * u
+        gc_t = reloc * lane["ftl_tpp"] + nblk * lane["ftl_terase"]
+        seg_dev = pages * lane["ftl_tpp"] + jnp.where(gc_on, gc_t, 0.0)
+        segw = jnp.where(
+            lane["ftl_on"],
+            jnp.maximum(ev["net_t"] * frac, seg_dev),
+            ev["ssd_w"] * frac,
+        )
 
         # flush bookkeeping while the foreground writes the SSD: the job
         # drains at its full Eq. 6 effective rate (no HDD contention)
         progressing = c["j_alive"] & allowed
         prog = c["j_rate"] * segw
         completed = progressing & (prog >= c["j_left"])
+        # a completing flush retires its region's log: the FTL trims
+        # those pages (they stop being live on flash)
+        trim_b = jnp.where(completed, c["s_used"], 0)
         j_left = jnp.where(
             completed,
             0.0,
@@ -842,6 +927,7 @@ def _ssd_fill_loop(g, lane, st, ev, allowed, dev_ssd):
         flushes = flushes + _i32(do_block)
         j_alive = j_alive & ~do_block
         j_left = jnp.where(do_block, 0.0, j_left)
+        trim_b = trim_b + jnp.where(do_block, s_used, 0)
         s_used = jnp.where(do_block, 0, s_used)
 
         # schedule the filled region's flush (Eq. 6: seeks = pro-rated
@@ -867,12 +953,23 @@ def _ssd_fill_loop(g, lane, st, ev, allowed, dev_ssd):
         cur_xf = jnp.where(sched, 0.0, c["cur_xf"] + wfrac)
 
         ovf = c["ovf"] | bb_ovf | (bb_trig & (rem > 0))
+        # FTL occupancy columns: programs consume free pages, GC restores
+        # the high watermark, retired (trimmed) region logs leave live
+        trim_p = trim_b.astype(jnp.float64) / lane["ftl_page"]
+        ftl_free = jnp.where(
+            lane["ftl_on"],
+            jnp.where(gc_on, lane["ftl_high"], free1),
+            c["ftl_free"],
+        )
+        ftl_live = jnp.where(lane["ftl_on"], live1 - trim_p, c["ftl_live"])
+        ftl_reloc = c["ftl_reloc"] + jnp.where(gc_on, reloc, 0.0)
         return {
             "rem": rem, "ovf": ovf, "clock": clock, "pause": pause,
             "blocked": blocked, "b_ssd": b_ssd, "flushes": flushes,
             "a_used": a_used, "s_used": s_used, "a_fs": a_fs,
             "j_left": j_left, "j_rate": j_rate, "j_alive": j_alive,
-            "cur_xf": cur_xf, **xf,
+            "cur_xf": cur_xf, "ftl_free": ftl_free, "ftl_live": ftl_live,
+            "ftl_reloc": ftl_reloc, **xf,
         }
 
     # HDD-routed streams and capacity-less lanes (orangefs) must never
@@ -888,12 +985,14 @@ def _ssd_fill_loop(g, lane, st, ev, allowed, dev_ssd):
         "j_left": st["j_left"], "j_rate": st["j_rate"],
         "j_alive": st["j_alive"],
         "cur_xf": jnp.zeros_like(st["a_fs"]),
+        "ftl_free": st["ftl_free"], "ftl_live": st["ftl_live"],
+        "ftl_reloc": st["ftl_reloc"],
         **{f"xf_{d}": st[f"xf_{d}"] for d in range(1, XMERGE_D + 1)},
     }
     return lax.while_loop(cond, body, init)
 
 
-def _hdd_advance(g, c, hdd_b, nb, ev, allowed):
+def _hdd_advance(g, lane, c, hdd_b, nb, ev, allowed):
     """Foreground HDD write of ``hdd_b`` bytes (whole stream or BB
     overflow suffix), Eq. 7 interference with a concurrent flush.
 
@@ -927,6 +1026,9 @@ def _hdd_advance(g, c, hdd_b, nb, ev, allowed):
         0.0,
         jnp.where(do & adv, c["j_left"] - prog, c["j_left"]),
     )
+    trim_p = jnp.where(completed, c["s_used"], 0).astype(
+        jnp.float64
+    ) / lane["ftl_page"]
     return {
         **c,
         "clock": c["clock"] + jnp.where(do, wall, 0.0),
@@ -937,10 +1039,13 @@ def _hdd_advance(g, c, hdd_b, nb, ev, allowed):
         "s_used": jnp.where(completed, 0, c["s_used"]),
         "j_alive": c["j_alive"] & ~completed,
         "j_left": j_left,
+        "ftl_live": jnp.where(
+            lane["ftl_on"], c["ftl_live"] - trim_p, c["ftl_live"]
+        ),
     }
 
 
-def _gap_step(st, sec):
+def _gap_step(lane, st, sec):
     """Compute phase: the flusher gets the HDD to itself (Eq. 6 rate)."""
 
     need = st["j_left"] / st["j_rate"]
@@ -950,6 +1055,9 @@ def _gap_step(st, sec):
         full, 0.0,
         jnp.where(partial, st["j_left"] - st["j_rate"] * sec, st["j_left"]),
     )
+    trim_p = jnp.where(full, st["s_used"], 0).astype(
+        jnp.float64
+    ) / lane["ftl_page"]
     return {
         **st,
         "clock": st["clock"] + sec,
@@ -958,6 +1066,9 @@ def _gap_step(st, sec):
         "s_used": jnp.where(full, 0, st["s_used"]),
         "j_alive": st["j_alive"] & ~full,
         "j_left": j_left,
+        "ftl_live": jnp.where(
+            lane["ftl_on"], st["ftl_live"] - trim_p, st["ftl_live"]
+        ),
     }
 
 
@@ -980,13 +1091,13 @@ def _stream_step(g, lane, st, ev):
         k: jnp.where(dev_ssd, c[k], st[k])
         for k in ("clock", "pause", "blocked", "b_ssd", "flushes",
                   "a_used", "s_used", "a_fs", "j_left", "j_rate",
-                  "j_alive")
+                  "j_alive", "ftl_free", "ftl_live", "ftl_reloc")
     }
     base["b_hdd"] = st["b_hdd"]
     base["gap"] = st["gap"]
     base["peak"] = st["peak"]
 
-    out = _hdd_advance(g, base, hdd_b, ev["nbytes"], ev, allowed)
+    out = _hdd_advance(g, lane, base, hdd_b, ev["nbytes"], ev, allowed)
     # shift the cross-merge partner window one stream: this stream's
     # active-region fraction enters at distance 1 (an HDD-routed stream
     # enters as 0 — its bytes never reached the region)
@@ -1016,7 +1127,7 @@ def _event_step(g, lane, st, ev):
     """The per-lane transition: gap, stream, or padded no-op."""
 
     strm = _stream_step(g, lane, st, ev)
-    gap = _gap_step(st, ev["gap_sec"])
+    gap = _gap_step(lane, st, ev["gap_sec"])
     pick = lambda a, b, c_: jnp.where(
         ev["valid"], jnp.where(ev["is_gap"], a, b), c_
     )
@@ -1045,6 +1156,9 @@ def _final_drain(g, st):
         "flush_paused_seconds": st["pause"],
         "blocked_seconds": st["blocked"],
         "peak_ssd_occupancy": st["peak"],
+        # FTL diagnostics (zeros on constant-backend lanes)
+        "ftl_reloc_pages": st["ftl_reloc"],
+        "ftl_live_pages": st["ftl_live"],
     }
 
 
@@ -1179,11 +1293,11 @@ def simulate_device(
     scheme: str = "ssdup+",
     ssd_capacity: int = 8 << 30,
     hdd: HDDModel | None = None,
-    ssd: SSDModel | None = None,
+    ssd: "SSDModel | object | None" = None,
     link: IngestLink | None = None,
     interference: InterferenceModel | None = None,
     stream_len: int = DEFAULT_STREAM_LEN,
-    flush_gate: float = 0.5,
+    flush_gate: float | str = 0.5,
     adaptive_window: int = 64,
     threshold_warmup: Sequence[float] | None = None,
     sanitize: bool | None = None,
@@ -1199,9 +1313,12 @@ def simulate_device(
         batch, scores, stream_len=stream_len, hdd=hdd, ssd=ssd, link=link
     )
     events = stack_events([tape])
-    lanes = _stack_lanes([lane_consts(scheme, ssd_capacity, flush_gate)])
+    lanes = _stack_lanes(
+        [lane_consts(scheme, ssd_capacity, flush_gate, ssd=ssd)]
+    )
     state0 = _stack_lanes(
-        [initial_lane_state(scheme, adaptive_window, threshold_warmup)]
+        [initial_lane_state(scheme, adaptive_window, threshold_warmup,
+                            ssd=ssd)]
     )
     out = replay_lanes(events, lanes, state0, hdd=hdd,
                        interference=interference, sanitize=sanitize)

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.distributed.sharding import TRACE_POLICIES, assign_nodes
 
+from .device_model import clone_storage, make_storage_model
 from .random_factor import DEFAULT_STREAM_LEN
 from ..analysis import sanitize as _sanitize
 from .simulator import IONodeSimulator, SimResult
@@ -238,9 +239,15 @@ class FleetSimulator:
             scores = compute_stream_scores(
                 shard, self.stream_len, backend=self.score_backend
             )
+            kw = node_kwargs
+            if "ssd" in kw:
+                # stateful storage (FTL) must never share mapping state
+                # across nodes — each I/O server has its own device
+                kw = dict(kw)
+                kw["ssd"] = clone_storage(kw["ssd"])
             node = IONodeSimulator(
                 scheme=self.scheme, stream_len=self.stream_len,
-                **node_kwargs,
+                **kw,
             )
             # shards stay columnar end-to-end: the batched replay engine
             # consumes the TraceBatch directly (no item materialization)
@@ -287,7 +294,7 @@ class FleetProgram:
         ssd=None,
         link=None,
         interference=None,
-        flush_gate: float = 0.5,
+        flush_gate: float | str = 0.5,
         adaptive_window: int = 64,
         threshold_warmup: Sequence[float] | None = None,
     ):
@@ -315,7 +322,13 @@ class FleetProgram:
         self.score_backend = score_backend
         self.ssd_capacity = ssd_capacity
         self.hdd = hdd
-        self.ssd = ssd
+        # resolve ssd= specs ("constant"/"ftl"/instance) once; every lane
+        # shares the template's geometry but carries its own FTL columns
+        # in the lane state, so one resolved model serves the whole sweep
+        self.ssd = (
+            make_storage_model(ssd, logical_bytes=ssd_capacity)
+            if isinstance(ssd, str) else ssd
+        )
         self.link = link
         self.interference = interference
         self.flush_gate = flush_gate
@@ -375,13 +388,16 @@ class FleetProgram:
             [tapes[n] for _ in self.schemes for n in range(self.num_nodes)]
         )
         lanes = ed._stack_lanes([
-            ed.lane_consts(s, self.ssd_capacity, self.flush_gate)
+            ed.lane_consts(
+                s, self.ssd_capacity, self.flush_gate, ssd=self.ssd
+            )
             for s in self.schemes
             for _ in range(self.num_nodes)
         ])
         state0 = ed._stack_lanes([
             ed.initial_lane_state(
-                s, self.adaptive_window, self.threshold_warmup
+                s, self.adaptive_window, self.threshold_warmup,
+                ssd=self.ssd,
             )
             for s in self.schemes
             for _ in range(self.num_nodes)

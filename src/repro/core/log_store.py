@@ -66,6 +66,9 @@ class LogRegion:
         self.name = name
         self.index_backend = index_backend
         self.tail = 0  # next append position
+        # LBA of this region's first byte on the backing SSD; stateful
+        # storage models (FTL) address appends as base_lba + log_offset
+        self.base_lba = 0
         # arrival-order record log: (file_id, offset, size, log_offset)
         self._rec = ColumnarAppender(4)
         self.trees: dict[int, object] = {}  # one index per backing file

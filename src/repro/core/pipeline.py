@@ -22,9 +22,12 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable
+from typing import TYPE_CHECKING, Callable
 
 from .log_store import LogRegion
+
+if TYPE_CHECKING:
+    from .device_model import HDDModel, StorageModel
 
 
 class FlushState(enum.Enum):
@@ -51,7 +54,7 @@ class FlushJob:
         return self.bytes_done >= self.bytes_total
 
     # -- Eq. 6 flush cost (paper Section 2.5) --------------------------
-    def service_seconds(self, hdd) -> float:
+    def service_seconds(self, hdd: "HDDModel") -> float:
         """Exclusive-HDD time to drain the whole job:
         ``seeks × seek_time + bytes / seq_bw`` (paper Eq. 6).
 
@@ -62,18 +65,26 @@ class FlushJob:
 
         return self.seeks * hdd.seek_time + self.bytes_total / hdd.seq_bw
 
-    def effective_rate(self, hdd) -> float:
+    def effective_rate(
+        self, hdd: "HDDModel", storage: "StorageModel | None" = None
+    ) -> float:
         """Drain rate (B/s) with the residual seeks amortized per byte.
 
         Every byte-budget drain path charges the flush at this rate, so
         the seek cost is paid no matter which code path drains the job
         (foreground-overlapped, compute gap, blocked writer, final
-        drain).
+        drain).  With a stateful ``storage`` model the flusher's SSD
+        *read* side can also bind (e.g. a degraded device): the rate is
+        then capped by ``storage.read_time``; the default models read
+        faster than the HDD writes, so the constant path is unchanged.
         """
 
         if self.bytes_total <= 0:
             return hdd.seq_bw
-        return self.bytes_total / self.service_seconds(hdd)
+        secs = self.service_seconds(hdd)
+        if storage is not None:
+            secs = max(secs, storage.read_time(self.bytes_total))
+        return self.bytes_total / secs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,14 +101,22 @@ class TwoRegionPipeline:
         self,
         region_capacity: int,
         traffic_aware: bool = True,
-        flush_gate: float = 0.5,
+        flush_gate: float | str = 0.5,
         percentage_source: Callable[[], float] | None = None,
         index_backend: str = "numpy",
+        storage: "StorageModel | None" = None,
+        fg_ssd_source: Callable[[], bool] | None = None,
     ):
+        if isinstance(flush_gate, str) and flush_gate != "device":
+            raise ValueError(
+                f"flush_gate must be a float or 'device', got {flush_gate!r}"
+            )
         self.regions = (
             LogRegion(region_capacity, "R0", index_backend=index_backend),
             LogRegion(region_capacity, "R1", index_backend=index_backend),
         )
+        # region 1 lives in the upper half of the SSD's logical space
+        self.regions[1].base_lba = region_capacity
         self.active = 0
         self.flush_job: FlushJob | None = None
         self._flush_backlog: list[FlushJob] = []
@@ -105,6 +124,12 @@ class TwoRegionPipeline:
         self.flush_gate = flush_gate
         # Detector hook: returns the current stream random percentage.
         self.percentage_source = percentage_source or (lambda: 1.0)
+        # Stateful storage backend (FTL): receives trim() when a flushed
+        # region's log dies.  None for the stateless constant model.
+        self.storage = storage
+        # Flush-gate v2 hook (flush_gate="device"): returns True while the
+        # foreground stream is writing the SSD (HDD quiet => flush).
+        self.fg_ssd_source = fg_ssd_source or (lambda: True)
         # stats
         self.flushes_completed = 0
         self.total_flushed_bytes = 0
@@ -158,6 +183,7 @@ class TwoRegionPipeline:
             # an EMPTY single-region buffer).  A zero-byte job would wedge
             # the drain loop: flush_progress() ignores nbytes <= 0, so the
             # job could never complete.  Clear the region and skip the job.
+            self._trim_region(region)
             region.reset()
             return
         job = FlushJob(
@@ -187,6 +213,10 @@ class TwoRegionPipeline:
             return False
         if job.forced or not self.traffic_aware:
             return True
+        if isinstance(self.flush_gate, str):  # flush_gate="device" (v2)
+            # Pause whenever the foreground stream is writing the HDD:
+            # the device itself, not the detector's percentage, decides.
+            return self.fg_ssd_source()
         # High random percentage => slow tier is quiet => flush now.
         return self.percentage_source() >= self.flush_gate
 
@@ -214,9 +244,16 @@ class TwoRegionPipeline:
             self.flush_job.paused_seconds += seconds
         self.total_paused_seconds += seconds
 
+    def _trim_region(self, region: LogRegion) -> None:
+        """Tell a stateful storage model the region's log content died."""
+
+        if self.storage is not None and region.used_bytes > 0:
+            self.storage.trim(region.base_lba, region.used_bytes)
+
     def _complete_flush(self) -> None:
         if self.flush_job is None:
             raise RuntimeError("completing a flush with no active job")
+        self._trim_region(self.flush_job.region)
         self.flush_job.region.reset()
         self.flush_job = None
         self.flushes_completed += 1

@@ -65,7 +65,16 @@ import numpy as np
 
 from ..analysis import sanitize as _sanitize
 from .adaptive import AdaptiveThreshold, StaticWatermarkThreshold
-from .device_model import HDDModel, IngestLink, InterferenceModel, SSDModel
+from .device_model import (
+    HDDModel,
+    IngestLink,
+    InterferenceModel,
+    SSDModel,
+    StorageModel,
+    clone_storage,
+    make_storage_model,
+)
+from .log_store import LogRegion
 from .pipeline import SingleRegionBuffer, TwoRegionPipeline
 from .random_factor import (
     DEFAULT_STREAM_LEN,
@@ -153,11 +162,11 @@ class IONodeSimulator:
         scheme: str = "ssdup+",
         ssd_capacity: int = 8 << 30,
         hdd: HDDModel | None = None,
-        ssd: SSDModel | None = None,
+        ssd: StorageModel | str | None = None,
         link: IngestLink | None = None,
         interference: InterferenceModel | None = None,
         stream_len: int = DEFAULT_STREAM_LEN,
-        flush_gate: float = 0.5,
+        flush_gate: float | str = 0.5,
         adaptive_window: int | None = 64,
         index_backend: str = "numpy",
         engine: str = "batched",
@@ -173,13 +182,26 @@ class IONodeSimulator:
                 "threshold_warmup requires a threshold scheme "
                 f"(ssdup/ssdup+), got {scheme!r}"
             )
+        if isinstance(flush_gate, str) and flush_gate != "device":
+            raise ValueError(
+                f"flush_gate must be a float or 'device', got {flush_gate!r}"
+            )
         self.scheme = scheme
         self.engine = engine
         # runtime invariant checks: True/False pins the instance, None
         # defers to REPRO_SANITIZE / the sanitizing() override
         self.sanitize = _sanitize.resolve(sanitize)
         self.hdd = hdd or HDDModel()
-        self.ssd = ssd or SSDModel()
+        # pluggable storage backend: "constant" (stateless, the default)
+        # or "ftl" (page-mapped, GC + write amplification) or an instance
+        self.ssd = make_storage_model(ssd, logical_bytes=ssd_capacity)
+        self.ssd_stateful = bool(getattr(self.ssd, "stateful", False))
+        # stateful models cap the flusher's SSD-read side and receive
+        # trim() calls; None keeps the constant path bit-exact
+        self._flush_storage: StorageModel | None = (
+            self.ssd if self.ssd_stateful else None
+        )
+        self._fg_ssd = False  # foreground device of the running stream
         self.link = link or IngestLink()
         self.interference = interference or InterferenceModel()
         self.stream_len = stream_len
@@ -200,6 +222,8 @@ class IONodeSimulator:
                 ssd_capacity // 2, traffic_aware=True, flush_gate=flush_gate,
                 percentage_source=lambda: self._last_pct,
                 index_backend=index_backend,
+                storage=self._flush_storage,
+                fg_ssd_source=lambda: self._fg_ssd,
             )
             self.redirector: DataRedirector | None = DataRedirector(policy, stream_len)
         elif scheme == "ssdup":
@@ -208,6 +232,7 @@ class IONodeSimulator:
                 ssd_capacity // 2, traffic_aware=False,
                 percentage_source=lambda: self._last_pct,
                 index_backend=index_backend,
+                storage=self._flush_storage,
             )
             self.redirector = DataRedirector(policy, stream_len)
         elif scheme == "orangefs-bb":
@@ -215,6 +240,7 @@ class IONodeSimulator:
                 ssd_capacity,
                 percentage_source=lambda: self._last_pct,
                 index_backend=index_backend,
+                storage=self._flush_storage,
             )
             self.redirector = None
         else:  # orangefs
@@ -235,6 +261,7 @@ class IONodeSimulator:
         """One foreground operation: device time ``device_dt`` alone,
         network-capped, with the background flush sharing the HDD."""
 
+        self._fg_ssd = not hdd_foreground  # flush-gate v2 device signal
         flushing = (
             self.pipeline is not None and self.pipeline.flush_job is not None
         )
@@ -251,12 +278,12 @@ class IONodeSimulator:
             disk_dt = device_dt * self.interference.foreground_slowdown()
             wall = max(net_dt, disk_dt)
             rate = (
-                job.effective_rate(self.hdd)
+                job.effective_rate(self.hdd, self._flush_storage)
                 * self.interference.flush_rate_fraction()
             )
         else:
             wall = max(net_dt, device_dt)
-            rate = job.effective_rate(self.hdd)
+            rate = job.effective_rate(self.hdd, self._flush_storage)
         self.pipeline.flush_progress(int(rate * wall))
         st.clock += wall
 
@@ -267,7 +294,7 @@ class IONodeSimulator:
             raise RuntimeError("no active flush job to drain")
         self.pipeline.force_flush()
         job = self.pipeline.flush_job
-        dt = job.bytes_left / job.effective_rate(self.hdd)
+        dt = job.bytes_left / job.effective_rate(self.hdd, self._flush_storage)
         self.pipeline.flush_progress(job.bytes_left)
         st.clock += dt
         return dt
@@ -286,7 +313,7 @@ class IONodeSimulator:
             budget = seconds
             while budget > 0 and self.pipeline.flush_job is not None:
                 job = self.pipeline.flush_job
-                rate = job.effective_rate(self.hdd)
+                rate = job.effective_rate(self.hdd, self._flush_storage)
                 need = job.bytes_left / rate
                 if need <= budget:
                     self.pipeline.flush_progress(job.bytes_left)
@@ -308,7 +335,9 @@ class IONodeSimulator:
             self.pipeline.drain()
             while self.pipeline.flush_job is not None:
                 job = self.pipeline.flush_job
-                st.clock += job.bytes_left / job.effective_rate(self.hdd)
+                st.clock += job.bytes_left / job.effective_rate(
+                    self.hdd, self._flush_storage
+                )
                 self.pipeline.flush_progress(job.bytes_left)
 
         total_bytes = st.bytes_ssd + st.bytes_hdd
@@ -374,6 +403,10 @@ class IONodeSimulator:
                 _sanitize.check(
                     left == 0, "drain left %d B buffered on the SSD", left
                 )
+        if self.ssd_stateful:
+            check_fn = getattr(self.ssd, "sanitize_check", None)
+            if check_fn is not None:
+                check_fn()  # FTL page/byte conservation ledgers
 
     # -- online session API (consumed by repro.service) -----------------
     #
@@ -612,10 +645,19 @@ class IONodeSimulator:
                             raise RuntimeError(
                                 "append rejected after a full drain"
                             )
-                    self._advance_fg(
-                        st, self.ssd.write_time(r.size), r.size,
-                        hdd_foreground=False,
-                    )
+                    if self.ssd_stateful:
+                        # charge the FTL at the LBA the append landed on
+                        reg = self.pipeline.active_region
+                        lba = np.array(
+                            [reg.base_lba + reg.tail - r.size], dtype=np.int64
+                        )
+                        dev_dt = float(self.ssd.charge_write(
+                            lba, np.array([r.size], dtype=np.int64),
+                            t=st.clock,
+                        )[0])
+                    else:
+                        dev_dt = self.ssd.write_time(r.size)
+                    self._advance_fg(st, dev_dt, r.size, hdd_foreground=False)
                     st.bytes_ssd += r.size
                 if overflow:
                     # overflow is a subset of the stream — no precomputed
@@ -705,6 +747,7 @@ class IONodeSimulator:
         per flush-state segment, dropping to Python only when a flush job
         completes mid-run."""
 
+        self._fg_ssd = True  # flush-gate v2 device signal
         i, m = 0, len(walls)
         while i < m:
             job = self.pipeline.flush_job
@@ -717,7 +760,7 @@ class IONodeSimulator:
                     )
                 st.clock = _seq_add(st.clock, seg)
                 return
-            rate = job.effective_rate(self.hdd)
+            rate = job.effective_rate(self.hdd, self._flush_storage)
             quanta = (rate * walls[i:]).astype(np.int64)
             cq = np.cumsum(quanta)
             j = int(np.searchsorted(cq, job.bytes_left, side="left"))
@@ -852,20 +895,55 @@ class IONodeSimulator:
             st.bytes_hdd += nbytes
             return
 
-        walls = np.maximum(sizes / self.link.bw, sizes / self.ssd.write_bw)
+        net = sizes / self.link.bw
+        # stateless models: one vectorized wall per request (bit-exact with
+        # the pre-refactor inline math).  Stateful models (walls=None):
+        # device times depend on mapping state, so the run helpers charge
+        # request-by-request with the landed LBAs.
+        walls = (
+            None if self.ssd_stateful
+            else np.maximum(net, self.ssd.charge_write(None, sizes))
+        )
         csum = np.cumsum(sizes)
         if isinstance(self.pipeline, SingleRegionBuffer):
             self._ssd_stream_single_region(
-                st, offsets, sizes, file_ids, walls, csum
+                st, offsets, sizes, file_ids, walls, net, csum
             )
         else:
             self._ssd_stream_two_region(
-                st, offsets, sizes, file_ids, walls, csum
+                st, offsets, sizes, file_ids, walls, net, csum
             )
         st.peak_ssd = max(st.peak_ssd, self.pipeline.buffered_bytes)
 
+    def _charge_ssd_run(
+        self,
+        st: _ReplayState,
+        region: "LogRegion",
+        log_offsets: np.ndarray,
+        sizes: np.ndarray,
+        net: np.ndarray,
+        walls: np.ndarray | None,
+    ) -> None:
+        """Advance the clock over one appended run of SSD writes.
+
+        Stateless models (``walls`` given) ride the vectorized pass.
+        Stateful models charge request-by-request at the landed LBAs so
+        flush-completion trims interleave with device charging exactly
+        like the per-request oracle (bit-parity for the FTL backend).
+        """
+
+        if walls is not None:
+            self._advance_ssd_run(st, walls)
+            return
+        lbas = region.base_lba + log_offsets
+        for i in range(len(sizes)):
+            dev = self.ssd.charge_write(
+                lbas[i:i + 1], sizes[i:i + 1], t=st.clock
+            )
+            self._advance_ssd_run(st, np.maximum(net[i:i + 1], dev))
+
     def _ssd_stream_two_region(
-        self, st, offsets, sizes, file_ids, walls, csum
+        self, st, offsets, sizes, file_ids, walls, net, csum
     ) -> None:
         """SSDUP/SSDUP+ SSD path: maximal in-region runs appended and timed
         in one shot; region swaps and writer blocks at run boundaries."""
@@ -878,10 +956,14 @@ class IONodeSimulator:
             limit = base + region.free_bytes()
             k = int(np.searchsorted(csum, limit, side="right"))
             if k > pos:  # requests [pos, k) fit the active region
+                logs = region.tail + (csum[pos:k] - sizes[pos:k]) - base
                 region.append_batch(
                     file_ids[pos:k], offsets[pos:k], sizes[pos:k]
                 )
-                self._advance_ssd_run(st, walls[pos:k])
+                self._charge_ssd_run(
+                    st, region, logs, sizes[pos:k], net[pos:k],
+                    None if walls is None else walls[pos:k],
+                )
                 st.bytes_ssd += int(csum[k - 1]) - base
                 pos = k
                 continue
@@ -896,12 +978,18 @@ class IONodeSimulator:
                 )
                 if not out.ok:
                     raise RuntimeError("append rejected after a full drain")
-            self._advance_ssd_run(st, walls[pos:pos + 1])
+            landed = self.pipeline.active_region
+            self._charge_ssd_run(
+                st, landed,
+                np.array([landed.tail - int(sizes[pos])], dtype=np.int64),
+                sizes[pos:pos + 1], net[pos:pos + 1],
+                None if walls is None else walls[pos:pos + 1],
+            )
             st.bytes_ssd += int(sizes[pos])
             pos += 1
 
     def _ssd_stream_single_region(
-        self, st, offsets, sizes, file_ids, walls, csum
+        self, st, offsets, sizes, file_ids, walls, net, csum
     ) -> None:
         """Plain-BB SSD path: buffer until (nearly) full, then everything
         else in the stream overflows straight to the HDD."""
@@ -941,10 +1029,14 @@ class IONodeSimulator:
             if trig.any():
                 t = pos + int(np.argmax(trig))
                 if t > pos:
+                    logs = region.tail + (csum[pos:t] - sizes[pos:t]) - base
                     region.append_batch(
                         file_ids[pos:t], offsets[pos:t], sizes[pos:t]
                     )
-                    self._advance_ssd_run(st, walls[pos:t])
+                    self._charge_ssd_run(
+                        st, region, logs, sizes[pos:t], net[pos:t],
+                        None if walls is None else walls[pos:t],
+                    )
                     st.bytes_ssd += int(csum[t - 1]) - base
                 # the trigger request goes through the scalar append, which
                 # schedules the forced flush exactly like the oracle
@@ -953,14 +1045,23 @@ class IONodeSimulator:
                 )
                 if not out.ok:
                     raise RuntimeError("eager-flush trigger append rejected")
-                self._advance_ssd_run(st, walls[t:t + 1])
+                self._charge_ssd_run(
+                    st, region,
+                    np.array([region.tail - int(sizes[t])], dtype=np.int64),
+                    sizes[t:t + 1], net[t:t + 1],
+                    None if walls is None else walls[t:t + 1],
+                )
                 st.bytes_ssd += int(sizes[t])
                 pos = t + 1
             else:
+                logs = region.tail + (csum[pos:k] - sizes[pos:k]) - base
                 region.append_batch(
                     file_ids[pos:k], offsets[pos:k], sizes[pos:k]
                 )
-                self._advance_ssd_run(st, walls[pos:k])
+                self._charge_ssd_run(
+                    st, region, logs, sizes[pos:k], net[pos:k],
+                    None if walls is None else walls[pos:k],
+                )
                 st.bytes_ssd += int(csum[k - 1]) - base
                 pos = k
         if overflow_from is not None:
@@ -993,7 +1094,12 @@ def run_schemes(
 
     if not isinstance(trace, TraceBatch):
         trace = list(trace)
-    return {
-        s: IONodeSimulator(scheme=s, **kwargs).run(trace, scores=scores)
-        for s in schemes
-    }
+    out: dict[str, SimResult] = {}
+    for s in schemes:
+        kw = dict(kwargs)
+        if "ssd" in kw:
+            # stateful storage (FTL) must not leak mapping state across
+            # scheme replays of the same trace
+            kw["ssd"] = clone_storage(kw["ssd"])
+        out[s] = IONodeSimulator(scheme=s, **kw).run(trace, scores=scores)
+    return out

@@ -468,11 +468,10 @@ class BurstBufferService:
         elif ev.kind == "slow":
             lane.slow_factor = ev.factor
         elif ev.kind == "ssd_degrade":
-            lane.sim.ssd = dataclasses.replace(
-                lane.sim.ssd,
-                write_bw=lane.sim.ssd.write_bw * ev.factor,
-                read_bw=lane.sim.ssd.read_bw * ev.factor,
-            )
+            # delegated to the storage model: the constant backend returns
+            # a scaled copy, the FTL slows t_prog/t_erase/read_bw in place
+            # (preserving identity, so pipeline trim hooks keep working)
+            lane.sim.ssd = lane.sim.ssd.degraded(ev.factor)
             lane.ssd_degraded = True
         elif ev.kind == "stall":
             lane.stall_at = ev.at
@@ -494,9 +493,12 @@ class BurstBufferService:
         outstanding = 0
         replay_dt = 0.0
         if pipe is not None:
+            storage = lane.sim.ssd if lane.sim.ssd_stateful else None
             for job in pipe.drain():
                 outstanding += job.bytes_left
-                replay_dt += job.bytes_left / job.effective_rate(lane.sim.hdd)
+                replay_dt += job.bytes_left / job.effective_rate(
+                    lane.sim.hdd, storage
+                )
         self._account_session(lane.sim, partial, outstanding, metrics)
         return outstanding, replay_dt
 

@@ -83,6 +83,14 @@ class GoldenTraceMismatch(AssertionError):
     the replay engine."""
 
 
+class GoldenStorageMismatch(AssertionError):
+    """The replay's storage-model configuration does not match the
+    fixture's embedded fingerprint — the snapshot was recorded under a
+    different SSD backend (or differently tuned FTL geometry), so a
+    result divergence would be meaningless.  Regenerate the fixtures
+    under the new backend, or replay with the recorded one."""
+
+
 # -- serialization -----------------------------------------------------
 
 
@@ -242,12 +250,28 @@ def device_tolerance_metadata() -> dict[str, list[float]]:
     return {f: [float(r), float(a)] for f, (r, a) in DEVICE_TOLERANCES.items()}
 
 
+def storage_model_metadata(ssd=None, capacity: int = 0) -> dict:
+    """Config fingerprint of the storage model a replay would use.
+
+    Embedded into every fixture next to ``device_tolerance`` so the
+    snapshot records *which* SSD backend (and geometry) produced it;
+    :func:`replay_fixture` refuses to compare across backends.
+    """
+
+    from repro.core.device_model import make_storage_model
+
+    return dict(
+        make_storage_model(ssd, logical_bytes=capacity).config_fingerprint()
+    )
+
+
 def make_fixture(scheme: str, workload: str, policy: str,
-                 engine: str = "batched") -> dict:
+                 engine: str = "batched", ssd=None) -> dict:
     """Run one fixture configuration and build its JSON payload."""
 
     batch = golden_trace(workload)
-    fr = _run(batch, scheme, policy, engine)
+    capacity = _node_capacity(batch.total_bytes)
+    fr = _run(batch, scheme, policy, engine, ssd=ssd)
     return {
         "schema": SCHEMA,
         "key": {
@@ -256,16 +280,17 @@ def make_fixture(scheme: str, workload: str, policy: str,
             "policy": policy,
             "engine": engine,
             "num_nodes": FIXTURE_NODES,
-            "ssd_capacity": _node_capacity(batch.total_bytes),
+            "ssd_capacity": capacity,
         },
         "trace": trace_fingerprint(batch),
         "result": fleet_result_to_dict(fr),
         "device_tolerance": device_tolerance_metadata(),
+        "storage_model": storage_model_metadata(ssd, capacity),
     }
 
 
 def _run(batch, scheme: str, policy: str, engine: str,
-         index_backend: str = "numpy") -> FleetResult:
+         index_backend: str = "numpy", ssd=None) -> FleetResult:
     return FleetSimulator(
         num_nodes=FIXTURE_NODES,
         scheme=scheme,
@@ -273,6 +298,7 @@ def _run(batch, scheme: str, policy: str, engine: str,
         ssd_capacity=_node_capacity(batch.total_bytes),
         engine=engine,
         index_backend=index_backend,
+        ssd=ssd,
     ).run(batch)
 
 
@@ -287,13 +313,15 @@ def load_fixture(path: pathlib.Path) -> dict:
 
 
 def replay_fixture(payload: dict, engine: str | None = None,
-                   index_backend: str = "numpy") -> FleetResult:
+                   index_backend: str = "numpy", ssd=None) -> FleetResult:
     """Rebuild the fixture's trace and replay its configuration.
 
     ``engine``/``index_backend`` may override the fixture's own (that is
     how one snapshot pins the per-request oracle and the AVL index).
     Raises :class:`GoldenTraceMismatch` if the rebuilt trace does not
-    match the stored fingerprint.
+    match the stored fingerprint, and :class:`GoldenStorageMismatch` if
+    ``ssd`` resolves to a storage backend other than the one the
+    snapshot was recorded under.
     """
 
     key = payload["key"]
@@ -305,8 +333,18 @@ def replay_fixture(payload: dict, engine: str | None = None,
             f"fingerprint {fp} != stored {payload['trace']} — the trace "
             "protocol changed (RNG stream or generator), not the engine"
         )
+    stored = payload.get("storage_model")
+    if stored is not None:
+        actual = storage_model_metadata(ssd, key["ssd_capacity"])
+        if actual != stored:
+            raise GoldenStorageMismatch(
+                f"storage backend mismatch: fixture recorded {stored}, "
+                f"replay would use {actual} — comparing results across "
+                "SSD models is meaningless; regenerate with --write or "
+                "replay under the recorded backend"
+            )
     return _run(batch, key["scheme"], key["policy"],
-                engine or key["engine"], index_backend)
+                engine or key["engine"], index_backend, ssd=ssd)
 
 
 def check_fixture(payload: dict, result: FleetResult,

@@ -42,7 +42,7 @@ import tempfile
 from typing import Mapping, Sequence
 
 SCHEMA = "bench-trajectory/v1"
-CURRENT_INDEX = 7  # bump per PR; the previous artifact becomes the anchor
+CURRENT_INDEX = 8  # bump per PR; the previous artifact becomes the anchor
 REGRESSION_THRESHOLD = 0.15
 
 _BENCH_RE = re.compile(r"^BENCH_(\d+)\.json$")

@@ -56,6 +56,7 @@ def _replay(payload, shard, scheme, **kwargs):
     ("orangefs", "orangefs", {}),
     ("ssdup+_gate0.5", "ssdup+", {}),
     ("ssdup+_gate0.75", "ssdup+", {"flush_gate": 0.75}),
+    ("ssdup+_gate-device", "ssdup+", {"flush_gate": "device"}),
 ])
 def test_replay_matches_fixture(payload, shard, key, scheme, kwargs):
     result, decisions = _replay(payload, shard, scheme, **kwargs)
@@ -85,6 +86,24 @@ def test_gate_raise_removes_inflation_without_rerouting(payload, shard):
     assert slow_dec == fast_dec
     assert fast.bytes_to_ssd == slow.bytes_to_ssd
     assert fast.io_seconds < base.io_seconds < slow.io_seconds
+
+
+def test_device_gate_fixes_shard_without_tuning(payload, shard):
+    """Flush-gate v2 (``flush_gate="device"``): pausing the flusher
+    whenever the foreground stream writes the HDD removes the anomaly's
+    self-interference *without a tuned percentage cutoff* — the device
+    gate matches the hand-tuned gate=0.75 result exactly here, because
+    both defer the flush past the HDD-bound final stream.  Routing is
+    untouched (the gate only times the flusher)."""
+
+    slow, slow_dec = _replay(payload, shard, "ssdup+")
+    dev, dev_dec = _replay(payload, shard, "ssdup+", flush_gate="device")
+    tuned, _ = _replay(payload, shard, "ssdup+", flush_gate=0.75)
+    base, _ = _replay(payload, shard, "orangefs")
+    assert dev_dec == slow_dec
+    assert dev.bytes_to_ssd == slow.bytes_to_ssd
+    assert dev.io_seconds < base.io_seconds < slow.io_seconds
+    assert dev.io_seconds == tuned.io_seconds
 
 
 def test_offending_stream_sits_between_gate_and_threshold(payload):

@@ -1,0 +1,382 @@
+"""Columnar FTL storage backend: geometry, GC, write amplification.
+
+Three layers of guarantees:
+
+* model-level — page/ledger conservation, trim semantics, GC-epoch
+  batch-size independence (charging the same traffic in any batch split
+  is bit-identical), and the paper's §2.5 claim as *properties*:
+  log-structured traffic never amplifies worse than in-place traffic,
+  and GC never reclaims a page holding the latest version of an extent;
+* engine-level — ``ssd="ftl"`` replays bit-identically between the
+  per-request oracle and the batched engine, and within the documented
+  tolerance on the device engine;
+* plumbing — ``ssd=`` spec resolution, per-scheme/per-node cloning,
+  degraded-mode rescaling, and config fingerprints.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic no-shrink fallback, same API surface
+    from _hypothesis_fallback import given, settings, st
+
+from repro.analysis import SanitizerError, sanitizing
+from repro.core import (
+    IONodeSimulator,
+    FTLModel,
+    SSDModel,
+    StorageModel,
+    clone_storage,
+    make_storage_model,
+    run_schemes,
+)
+from repro.testing.traces import golden_trace
+
+KiB = 1024
+MiB = 1 << 20
+
+# Small geometry so a few hundred requests exercise wraparound and GC:
+# 1 MiB logical = 4 blocks of 64 pages; watermarks low enough that the
+# overprovision pool (10 blocks) actually cycles.
+SMALL = dict(
+    logical_bytes=1 * MiB,
+    page_size=4 * KiB,
+    pages_per_block=64,
+    n_channels=4,
+    gc_low_blocks=2,
+    gc_high_blocks=4,
+)
+
+
+def small_ftl(**over) -> FTLModel:
+    return FTLModel(**{**SMALL, **over})
+
+
+# -- construction and spec resolution ----------------------------------
+
+
+class TestConstruction:
+    def test_default_nominal_bandwidth_matches_constant_model(self):
+        """t_prog defaults so the GC-free striped bandwidth equals the
+        constant model's 380 MB/s — same workload, same nominal rate."""
+
+        ftl = FTLModel(logical_bytes=1 * MiB)
+        assert ftl.write_bw == pytest.approx(SSDModel().write_bw)
+
+    @pytest.mark.parametrize("bad", [
+        dict(logical_bytes=0),
+        dict(page_size=0),
+        dict(pages_per_block=0),
+        dict(n_channels=0),
+        dict(overprovision=-0.1),
+        dict(gc_low_blocks=1),                      # < 2
+        dict(gc_low_blocks=4, gc_high_blocks=4),    # low >= high
+    ])
+    def test_bad_geometry_rejected(self, bad):
+        with pytest.raises(ValueError):
+            small_ftl(**bad)
+
+    def test_make_storage_model_resolves_specs(self):
+        assert isinstance(make_storage_model(None), SSDModel)
+        assert isinstance(make_storage_model("constant"), SSDModel)
+        ftl = make_storage_model("ftl", logical_bytes=1 * MiB)
+        assert isinstance(ftl, FTLModel)
+        assert make_storage_model(ftl) is ftl
+        with pytest.raises(ValueError):
+            make_storage_model("ftl")  # no capacity to size the space
+        with pytest.raises(ValueError):
+            make_storage_model("nvme-zns")
+        with pytest.raises(TypeError):
+            make_storage_model(42)
+
+    def test_both_backends_satisfy_protocol(self):
+        assert isinstance(SSDModel(), StorageModel)
+        assert isinstance(small_ftl(), StorageModel)
+
+    def test_clone_storage_isolates_stateful_state(self):
+        ftl = small_ftl()
+        ftl.charge_write(np.array([0]), np.array([8 * KiB]))
+        twin = clone_storage(ftl)
+        assert twin is not ftl
+        assert twin.host_bytes == 0  # fresh state, same geometry
+        assert twin.config_fingerprint() == ftl.config_fingerprint()
+        const = SSDModel()
+        assert clone_storage(const) is const  # immutable: shared
+        assert clone_storage("ftl") == "ftl"
+        assert clone_storage(None) is None
+
+
+# -- charge_write contract ---------------------------------------------
+
+
+class TestChargeWrite:
+    def test_requires_offsets(self):
+        with pytest.raises(ValueError, match="offsets"):
+            small_ftl().charge_write(None, np.array([4 * KiB]))
+
+    def test_rejects_out_of_range_lba(self):
+        ftl = small_ftl()
+        with pytest.raises(ValueError):
+            ftl.charge_write(np.array([1 * MiB]), np.array([4 * KiB]))
+        with pytest.raises(ValueError):
+            ftl.charge_write(np.array([-4096]), np.array([4 * KiB]))
+
+    def test_rejects_length_mismatch(self):
+        with pytest.raises(ValueError):
+            small_ftl().charge_write(np.array([0, 4096]), np.array([4096]))
+
+    def test_gc_free_write_costs_pages_times_t_page(self):
+        ftl = small_ftl()
+        times = ftl.charge_write(
+            np.array([0, 16 * KiB]), np.array([16 * KiB, 6 * KiB])
+        )
+        assert times[0] == pytest.approx(4 * ftl.t_page)
+        assert times[1] == pytest.approx(2 * ftl.t_page)  # ceil(6/4)
+
+    def test_zero_size_costs_nothing(self):
+        ftl = small_ftl()
+        times = ftl.charge_write(np.array([0]), np.array([0]))
+        assert times[0] == 0.0
+        assert ftl.host_pages == 0
+
+    def test_batch_split_independence(self):
+        """Charging one arrival sequence in any batch split is
+        bit-identical — times, mapping table, and GC history."""
+
+        rng = np.random.default_rng(7)
+        n = 500
+        pages = 1 * MiB // (4 * KiB)
+        offsets = rng.integers(0, pages, n) * 4 * KiB
+        sizes = rng.integers(1, 5, n) * 4 * KiB
+        offsets = np.minimum(offsets, 1 * MiB - sizes).astype(np.int64)
+        sizes = sizes.astype(np.int64)
+
+        whole = small_ftl()
+        t_whole = whole.charge_write(offsets, sizes)
+        split = small_ftl()
+        cuts = sorted(set(rng.integers(1, n, 9).tolist()) | {0, n})
+        t_split = np.concatenate([
+            split.charge_write(offsets[a:b], sizes[a:b])
+            for a, b in zip(cuts[:-1], cuts[1:])
+        ])
+        np.testing.assert_array_equal(t_whole, t_split)
+        np.testing.assert_array_equal(whole._l2p, split._l2p)
+        assert whole.stats() == split.stats()
+
+
+# -- trim, GC, and write amplification ---------------------------------
+
+
+class TestGarbageCollection:
+    def test_sequential_log_with_trim_stays_wa_one(self):
+        """The log-store pattern (§2.5): append sequentially, trim the
+        whole region when it dies.  GC never has to move a byte."""
+
+        ftl = small_ftl()
+        for _round in range(6):  # 6 MiB through a 1 MiB space
+            head = 0
+            while head < 1 * MiB:
+                ftl.charge_write(np.array([head]), np.array([16 * KiB]))
+                head += 16 * KiB
+            ftl.trim(0, 1 * MiB)
+        assert ftl.wa == 1.0
+        assert ftl.reloc_pages == 0
+
+    def test_random_overwrite_amplifies(self):
+        """In-place random overwrites at high occupancy force GC to
+        relocate still-valid pages: WA > 1 and erases happen."""
+
+        ftl = small_ftl()
+        rng = np.random.default_rng(3)
+        pages = 1 * MiB // (4 * KiB)
+        for _ in range(8):
+            offs = rng.permutation(pages).astype(np.int64) * 4 * KiB
+            ftl.charge_write(offs, np.full(pages, 4 * KiB, dtype=np.int64))
+        assert ftl.wa > 1.0
+        assert ftl.gc_runs > 0
+        assert ftl.erases > 0
+
+    def test_gc_time_charged_to_triggering_request(self):
+        """A request that trips the watermark pays the reclaim time —
+        total charged seconds exceed the GC-free cost."""
+
+        ftl = small_ftl()
+        rng = np.random.default_rng(5)
+        pages = 1 * MiB // (4 * KiB)
+        total = 0.0
+        for _ in range(8):
+            offs = rng.permutation(pages).astype(np.int64) * 4 * KiB
+            total += float(ftl.charge_write(
+                offs, np.full(pages, 4 * KiB, dtype=np.int64)
+            ).sum())
+        gc_free = 8 * pages * ftl.t_page
+        assert total > gc_free
+
+    def test_trim_only_drops_fully_covered_pages(self):
+        ftl = small_ftl()
+        ftl.charge_write(np.array([0]), np.array([8 * KiB]))  # pages 0,1
+        ftl.trim(2 * KiB, 4 * KiB)  # straddles, covers no whole page
+        assert ftl.live_pages == 2
+        ftl.trim(0, 8 * KiB)
+        assert ftl.live_pages == 0
+
+    def test_degraded_slows_in_place(self):
+        ftl = small_ftl()
+        t0 = ftl.t_page
+        assert ftl.degraded(0.5) is ftl  # identity preserved
+        assert ftl.t_page == pytest.approx(2 * t0)
+        with pytest.raises(ValueError):
+            ftl.degraded(0.0)
+
+    def test_sanitize_check_passes_after_heavy_churn(self):
+        ftl = small_ftl()
+        rng = np.random.default_rng(11)
+        pages = 1 * MiB // (4 * KiB)
+        for _ in range(4):
+            offs = rng.permutation(pages).astype(np.int64) * 4 * KiB
+            ftl.charge_write(offs, np.full(pages, 4 * KiB, dtype=np.int64))
+            ftl.trim(0, 256 * KiB)
+        with sanitizing():
+            ftl.sanitize_check()
+
+    def test_sanitize_check_catches_seeded_ledger_bug(self):
+        ftl = small_ftl()
+        ftl.charge_write(np.array([0]), np.array([64 * KiB]))
+        ftl._valid_total += 1  # seeded corruption
+        with sanitizing(), pytest.raises(SanitizerError):
+            ftl.sanitize_check()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_log_structured_wa_never_worse_than_inplace(seed):
+    """Paper §2.5: for identical host traffic, writing it as a
+    sequential log (with whole-region trims on wrap) never amplifies
+    worse than writing it in place."""
+
+    rng = np.random.default_rng(seed)
+    n = 300
+    pages = 1 * MiB // (4 * KiB)
+    sizes = (rng.integers(1, 5, n) * 4 * KiB).astype(np.int64)
+    offsets = (rng.integers(0, pages, n) * 4 * KiB).astype(np.int64)
+    offsets = np.minimum(offsets, 1 * MiB - sizes)
+
+    inplace = small_ftl()
+    inplace.charge_write(offsets, sizes)
+
+    log = small_ftl()
+    head = 0
+    for s in sizes:
+        if head + int(s) > 1 * MiB:
+            log.trim(0, 1 * MiB)
+            head = 0
+        log.charge_write(
+            np.array([head], dtype=np.int64), np.array([s], dtype=np.int64)
+        )
+        head += int(s)
+    assert log.wa <= inplace.wa + 1e-12
+    assert log.wa == 1.0  # appends + whole-region trims never relocate
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_gc_never_reclaims_latest_version(seed):
+    """Every logical page ever written still round-trips through the
+    mapping tables after arbitrary churn: GC may move the latest
+    version, never lose it."""
+
+    rng = np.random.default_rng(seed)
+    ftl = small_ftl()
+    pages = 1 * MiB // (4 * KiB)
+    written = set()
+    for _ in range(6):
+        k = int(rng.integers(50, 200))
+        offs = (rng.integers(0, pages, k) * 4 * KiB).astype(np.int64)
+        ftl.charge_write(offs, np.full(k, 4 * KiB, dtype=np.int64))
+        written.update((offs // (4 * KiB)).tolist())
+    lpns = np.array(sorted(written), dtype=np.int64)
+    phys = ftl._l2p[lpns]
+    assert (phys >= 0).all()  # still mapped
+    np.testing.assert_array_equal(ftl._p2l[phys], lpns)  # and consistent
+    with sanitizing():
+        ftl.sanitize_check()
+
+
+# -- engine threading --------------------------------------------------
+
+
+SCHEMES = ("orangefs", "orangefs-bb", "ssdup", "ssdup+")
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("workload", ("mixed-burst", "strided-gaps"))
+    def test_per_request_matches_batched_bit_exact(self, workload):
+        trace = golden_trace(workload)
+        for scheme in SCHEMES:
+            kw = dict(scheme=scheme, ssd_capacity=4 * MiB, ssd="ftl")
+            a = IONodeSimulator(engine="per-request", **kw).run(trace)
+            b = IONodeSimulator(engine="batched", **kw).run(trace)
+            assert a == b, scheme
+
+    def test_constant_spec_matches_default_bit_exact(self):
+        trace = golden_trace("mixed-burst")
+        for scheme in SCHEMES:
+            a = IONodeSimulator(
+                scheme=scheme, ssd_capacity=4 * MiB, ssd="constant"
+            ).run(trace)
+            b = IONodeSimulator(scheme=scheme, ssd_capacity=4 * MiB).run(trace)
+            assert a == b, scheme
+
+    def test_device_engine_within_tolerance(self):
+        pytest.importorskip("jax")
+        trace = golden_trace("mixed-burst")
+        for scheme in ("ssdup", "ssdup+"):
+            kw = dict(scheme=scheme, ssd_capacity=32 * MiB, ssd="ftl")
+            ref = IONodeSimulator(engine="batched", **kw).run(trace)
+            dev = IONodeSimulator(engine="device", **kw).run(trace)
+            assert dev.io_seconds == pytest.approx(
+                ref.io_seconds, rel=0.05
+            ), scheme
+
+    def test_run_schemes_keeps_models_independent(self):
+        """A shared ``ssd="ftl"`` spec across a scheme sweep must not
+        leak one scheme's mapping state into the next."""
+
+        trace = golden_trace("mixed-burst")
+        together = run_schemes(trace, ssd_capacity=4 * MiB, ssd="ftl")
+        for scheme, res in together.items():
+            alone = IONodeSimulator(
+                scheme=scheme, ssd_capacity=4 * MiB, ssd="ftl"
+            ).run(trace)
+            assert res == alone, scheme
+
+
+class TestFlushGateDevice:
+    def test_invalid_gate_string_rejected(self):
+        with pytest.raises(ValueError, match="flush_gate"):
+            IONodeSimulator(scheme="ssdup+", flush_gate="adaptive")
+
+    @pytest.mark.parametrize("workload", ("mixed-burst", "strided-gaps"))
+    def test_per_request_matches_batched(self, workload):
+        trace = golden_trace(workload)
+        kw = dict(scheme="ssdup+", ssd_capacity=4 * MiB, flush_gate="device")
+        a = IONodeSimulator(engine="per-request", **kw).run(trace)
+        b = IONodeSimulator(engine="batched", **kw).run(trace)
+        assert a == b
+
+    def test_routing_untouched_by_gate_scheme(self):
+        """The device gate only retimes the flusher: byte routing is
+        identical to the percentage gate."""
+
+        trace = golden_trace("mixed-burst")
+        pct = IONodeSimulator(
+            scheme="ssdup+", ssd_capacity=4 * MiB, flush_gate=0.5
+        ).run(trace)
+        dev = IONodeSimulator(
+            scheme="ssdup+", ssd_capacity=4 * MiB, flush_gate="device"
+        ).run(trace)
+        assert dev.bytes_to_ssd == pct.bytes_to_ssd
+        assert dev.bytes_to_hdd_direct == pct.bytes_to_hdd_direct

@@ -11,6 +11,7 @@ from repro.testing.golden import (
     FIXTURE_SCHEMES,
     FIXTURE_WORKLOADS,
     GOLDEN_DIR,
+    GoldenStorageMismatch,
     GoldenTraceMismatch,
     check_fixture,
     first_divergence,
@@ -120,6 +121,26 @@ def test_trace_fingerprint_guards_protocol_drift(payloads):
     payload["trace"]["sha256"] = "0" * 64
     with pytest.raises(GoldenTraceMismatch, match="trace"):
         replay_fixture(payload)
+
+
+def test_every_fixture_embeds_storage_fingerprint(payloads):
+    """Fixtures record the SSD backend they were generated under, next
+    to the device-tolerance contract."""
+
+    for name, payload in payloads.items():
+        sm = payload.get("storage_model")
+        assert sm, f"{name}: missing storage_model fingerprint"
+        assert sm["name"] == "constant", name
+
+
+def test_replay_under_different_backend_fails_loudly(payloads):
+    """A fixture snapshot is only meaningful under the storage backend
+    that produced it: replaying under the FTL must refuse up front, not
+    report a confusing timing divergence."""
+
+    payload = next(iter(payloads.values()))
+    with pytest.raises(GoldenStorageMismatch, match="storage backend"):
+        replay_fixture(payload, ssd="ftl")
 
 
 def test_fixture_floats_roundtrip_exactly(payloads):

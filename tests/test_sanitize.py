@@ -183,6 +183,33 @@ class TestCatchesInjectedBugs:
         result = svc2.run(small_batch())
         assert result.metrics.conservation_violations()
 
+    def test_ftl_ledger_violation_caught(self, monkeypatch):
+        """A page that goes missing from the FTL's conservation ledger
+        (valid + invalid + free == total) must trip the end-of-run
+        storage check, and sail through silently without sanitize."""
+
+        from repro.core.ftl import FTLModel
+        from repro.testing.traces import golden_trace
+
+        batch = golden_trace("mixed-burst")
+        trim = FTLModel.trim
+
+        def leaky(self, offset, nbytes):
+            trim(self, offset, nbytes)
+            self._invalid_pages -= 1  # page leaked out of the ledger
+
+        monkeypatch.setattr(FTLModel, "trim", leaky)
+        sim = IONodeSimulator(
+            scheme="ssdup+", ssd="ftl", ssd_capacity=4 * MiB, sanitize=True
+        )
+        with pytest.raises(SanitizerError, match="conservation"):
+            sim.run(batch)
+        sim2 = IONodeSimulator(
+            scheme="ssdup+", ssd="ftl", ssd_capacity=4 * MiB
+        )
+        res = sim2.run(batch)  # same bug, sanitizer off: no raise
+        assert res.bytes_to_ssd > 0  # the buggy trim path actually ran
+
     def test_device_nan_caught(self):
         from repro.core import engine_device
         from repro.core.trace import compute_stream_scores
